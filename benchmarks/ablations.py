@@ -1,0 +1,61 @@
+"""Ablations over the paper's two training-side contributions.
+
+  1. Activation selection (paper §QAT): the per-layer rule vs forcing a
+     mismatched quantizer family everywhere.
+  2. FCP schedule (paper §FCP): gradual (Zhu–Gupta) vs ADMM vs one-shot
+     post-training projection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.jsc import JSC_S  # noqa: F401
+from repro.configs.jsc import JSC_DEMO
+from repro.data.jsc import train_test
+from repro.models.mlp import MLPConfig
+from repro.train.jsc_trainer import train_jsc
+
+CFG = dataclasses.replace(JSC_DEMO, features=(32, 16, 5),
+                          fanins=(4, 4, 4), act_bits=(2, 2, 3))
+DATA = train_test(12000, 4000, seed=0)
+
+
+def act_selection() -> Dict:
+    """Correct rule (signed — JSC features take both signs) vs
+    binary-everywhere vs 1-bit sign (capacity ablation)."""
+    out = {}
+    for tag, in_bits, bits in [("rule_signed2", 2, (2, 2, 3)),
+                               ("sign_1bit", 1, (1, 1, 3)),
+                               ("signed_3bit", 3, (3, 3, 3))]:
+        cfg = dataclasses.replace(CFG, in_bits=in_bits, act_bits=bits)
+        res = train_jsc(cfg, steps=700, data=DATA)
+        out[tag] = round(res.test_acc, 4)
+        print(f"[ablation/act] {tag}: acc={res.test_acc:.4f}", flush=True)
+    return out
+
+
+def fcp_schedules() -> Dict:
+    out = {}
+    for tag, kwargs in [("gradual", {"fcp": "gradual"}),
+                        ("admm", {"fcp": "admm"}),
+                        ("oneshot", {"fcp": "gradual",
+                                     "fcp_begin_frac": 0.95,
+                                     "fcp_end_frac": 0.96})]:
+        res = train_jsc(CFG, steps=700, data=DATA, **kwargs)
+        out[tag] = round(res.test_acc, 4)
+        print(f"[ablation/fcp] {tag}: acc={res.test_acc:.4f}", flush=True)
+    return out
+
+
+def run() -> Dict:
+    return {"activation_selection": act_selection(),
+            "fcp_schedule": fcp_schedules()}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle, µs/call.
+
+Interpret-mode timings on CPU are NOT TPU performance; the derived
+column reports the work size (elements or MACs) so roofline reasoning
+stays attached to each number.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *args, iters=20) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> Dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # lut_layer: JSC-M-ish layer
+    from repro.kernels.lut_layer import lut_layer, lut_layer_ref
+    B, n_in, N, K, L = 256, 64, 64, 4, 4
+    codes = jnp.asarray(rng.integers(0, L, (B, n_in)), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, n_in, (N, K)), jnp.int32)
+    tables = jnp.asarray(rng.integers(0, L, (N, L ** K)), jnp.int32)
+    f_ref = jax.jit(lambda c: lut_layer_ref(c, idx, tables, L))
+    f_pal = jax.jit(lambda c: lut_layer(c, idx, tables, L))
+    out["lut_layer_ref_us"] = _t(f_ref, codes)
+    out["lut_layer_pallas_us"] = _t(f_pal, codes)
+
+    # xnor: 256x4096 @ 4096x256
+    from repro.kernels.xnor_popcount import (pack_bipolar, xnor_matmul,
+                                             xnor_matmul_ref)
+    x = jnp.asarray(rng.choice([-1.0, 1.0], (256, 4096)), jnp.float32)
+    w = jnp.asarray(rng.choice([-1.0, 1.0], (256, 4096)), jnp.float32)
+    out["xnor_ref_us"] = _t(jax.jit(xnor_matmul_ref), x, w)
+    out["xnor_pallas_us"] = _t(jax.jit(xnor_matmul), x, w)
+
+    # fanin_matmul: FCP layer 256 x (4096 -> 1024, K=8)
+    from repro.kernels.fanin_matmul import fanin_matmul, fanin_matmul_ref
+    xb = jnp.asarray(rng.normal(size=(256, 4096)), jnp.float32)
+    idxb = jnp.asarray(rng.integers(0, 4096, (1024, 8)), jnp.int32)
+    wb = jnp.asarray(rng.normal(size=(1024, 8)), jnp.float32)
+    bias = jnp.zeros((1024,), jnp.float32)
+    out["fanin_ref_us"] = _t(jax.jit(fanin_matmul_ref), xb, idxb, wb, bias)
+    out["fanin_pallas_us"] = _t(jax.jit(fanin_matmul), xb, idxb, wb, bias)
+    # dense equivalent cost at same shapes (what FCP saves)
+    wd = jnp.asarray(rng.normal(size=(1024, 4096)), jnp.float32)
+    out["fanin_dense_us"] = _t(jax.jit(lambda x: x @ wd.T), xb)
+
+    # flash attention: 1k context, 4 heads
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import full_attention
+    q = jnp.asarray(rng.normal(size=(1, 1024, 4, 64)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    out["flash_ref_us"] = _t(jax.jit(
+        lambda q, k, v: full_attention(q, k, v, causal=True)), q, kk, vv)
+    out["flash_pallas_us"] = _t(jax.jit(
+        lambda q, k, v: flash_attention(q, k, v)), q, kk, vv, iters=3)
+
+    for k, v in out.items():
+        print(f"[kernels] {k}: {v:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Inference latency: compiled-logic path vs dense float vs XNOR path.
+
+The paper's headline is ultra-low latency. On the FPGA that is the LUT
+pipeline (modelled in table1_jsc); here we ALSO measure the TPU-analogue
+execution paths in µs/call on this host (CPU; indicative, not TPU
+timings) — logic-gather vs dense-bf16 MLP vs packed XNOR matmul at the
+same topology.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.jsc import JSC
+from repro.data.jsc import train_test
+from repro.models.mlp import to_logic
+from repro.train.jsc_trainer import train_jsc
+
+
+def _time_call(fn, *args, iters: int = 50) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(steps: int = 600, batch: int = 256) -> Dict:
+    cfg = JSC["jsc-s"]
+    data = train_test(10000, 2000)
+    res = train_jsc(cfg, steps=steps, data=data)
+    net = to_logic(cfg, res.params, res.masks, res.bn_state)
+    x = jnp.asarray(data[1][0][:batch])
+
+    logic_fn = jax.jit(lambda x: net(x))
+    pallas_fn = jax.jit(lambda x: net(x, use_pallas=True))
+
+    # dense float reference at the same topology
+    ws = [(jnp.asarray(np.random.randn(o, i), jnp.float32))
+          for i, o in zip((cfg.n_inputs,) + cfg.features, cfg.features)]
+
+    @jax.jit
+    def dense_fn(x):
+        h = x
+        for w in ws:
+            h = jax.nn.relu(h @ w.T)
+        return h
+
+    # packed XNOR path (binary-QAT inference primitive)
+    from repro.kernels.xnor_popcount import xnor_matmul
+    wq = jnp.sign(ws[0])
+
+    @jax.jit
+    def xnor_fn(x):
+        return xnor_matmul(jnp.sign(x), wq)
+
+    out = {
+        "logic_us": _time_call(logic_fn, x),
+        "logic_pallas_us": _time_call(pallas_fn, x),
+        "dense_float_us": _time_call(dense_fn, x),
+        "xnor_us": _time_call(xnor_fn, x),
+        "batch": batch,
+    }
+    out["logic_vs_dense_x"] = round(out["dense_float_us"]
+                                    / out["logic_us"], 2)
+    for k, v in out.items():
+        if k.endswith("_us"):
+            print(f"[latency] {k}: {v:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

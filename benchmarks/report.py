@@ -1,0 +1,88 @@
+"""Render the EXPERIMENTS.md roofline tables (baseline vs optimized)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.roofline import load_rows, roofline_row
+
+
+def _key(r):
+    return (r["arch"], r["shape"], r["mesh"])
+
+
+def markdown_tables(base_dir="benchmarks/results/dryrun",
+                    opt_dir="benchmarks/results/dryrun_opt") -> str:
+    base = {_key(r): r for r in load_rows(base_dir)}
+    opt = {_key(r): r for r in load_rows(opt_dir)} \
+        if os.path.isdir(opt_dir) else {}
+
+    lines = []
+    lines.append("| arch | shape | comp(s) | mem(s) | coll(s) | dominant |"
+                 " useful | roofline | best coll(s) | best roofline |"
+                 " gain | strategy |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for k in sorted(base):
+        if k[2] != "single":
+            continue
+        r = base[k]
+        o = opt.get(k)
+
+        def step(row):
+            return max(row["t_compute_s"], row["t_memory_s"],
+                       row["t_collective_s"])
+
+        # per-cell strategy choice: optimized layout unless the baseline
+        # 2-D fsdp+tensor layout is already better (dense prefill).
+        chosen, label = r, "baseline-2D"
+        if o and step(o) < step(r):
+            chosen, label = o, "optimized"
+        lines.append(
+            f"| {k[0]} | {k[1]} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{100*r['roofline_fraction']:.1f}% | "
+            f"{chosen['t_collective_s']:.3f} | "
+            f"{100*chosen['roofline_fraction']:.1f}% | "
+            f"{step(r)/step(chosen):.1f}x | {label} |")
+    # multi-pod summary
+    n_multi_b = sum(1 for k in base if k[2] == "multi")
+    n_multi_o = sum(1 for k in opt if k[2] == "multi")
+    lines.append("")
+    lines.append(f"Multi-pod (2x16x16 = 512 chips): {n_multi_b} baseline "
+                 f"and {n_multi_o} optimized cells lowered+compiled OK.")
+    return "\n".join(lines)
+
+
+def dryrun_summary(base_dir="benchmarks/results/dryrun") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(base_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    lines = ["| arch | shape | mesh | compile(s) | flops/dev | coll bytes/dev"
+             " | args(GiB/dev) | temps(GiB/dev) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in ok:
+        e = r.get("extrapolated", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {r['compile_s']} | {e.get('flops_per_device', 0):.2e} |"
+            f" {e.get('collective_total_bytes', 0):.2e} |"
+            f" {r.get('argument_size_in_bytes', 0)/2**30/r['n_devices']:.2f} |"
+            f" {r.get('temp_size_in_bytes', 0)/2**30:.1f} |")
+    lines.append("")
+    lines.append(f"{len(ok)} cells compiled OK; {len(skipped)} skipped "
+                 "(full-attention archs at 500k context, per DESIGN.md §4).")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run summary\n")
+    print(dryrun_summary())
+    print("\n## Roofline\n")
+    print(markdown_tables())

@@ -1,0 +1,94 @@
+"""Benchmark driver — one function per paper table/figure + repo extras.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = host wall
+time where measured; hardware-model metrics land in the derived column).
+
+  table1   — paper Table I: JSC-S/M/L accuracy + LUT/FF/fmax vs the
+             LogicNets baseline (ratios = the paper's claims)
+  latency  — logic path vs dense float vs XNOR, µs/call
+  ablation — activation-selection + FCP-schedule ablations
+  kernels  — Pallas kernel microbenchmarks vs oracles
+  roofline — dry-run derived roofline table (if results exist)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,latency,ablation,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps (CI mode)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    all_results = {}
+
+    def want(x):
+        return only is None or x in only
+
+    print("name,us_per_call,derived")
+
+    if want("table1"):
+        from benchmarks import table1_jsc
+        t0 = time.time()
+        res = table1_jsc.run(steps=300 if args.fast else 1200)
+        all_results["table1"] = res
+        for k, r in res.items():
+            _emit(f"table1/{k}", (time.time() - t0) * 1e6 / 3,
+                  f"acc={r['accuracy']:.4f};luts={r['nullanet']['luts']};"
+                  f"lut_red={r['lut_reduction_x']}x;"
+                  f"fmax={r['nullanet']['fmax_mhz']}MHz;"
+                  f"lat_red={r['latency_reduction_x']}x")
+
+    if want("latency"):
+        from benchmarks import latency
+        res = latency.run(steps=200 if args.fast else 600)
+        all_results["latency"] = res
+        _emit("latency/logic", res["logic_us"],
+              f"dense={res['dense_float_us']:.0f}us;"
+              f"speedup={res['logic_vs_dense_x']}x")
+
+    if want("ablation"):
+        from benchmarks import ablations
+        res = ablations.run()
+        all_results["ablation"] = res
+        _emit("ablation/act", 0.0, json.dumps(res["activation_selection"]))
+        _emit("ablation/fcp", 0.0, json.dumps(res["fcp_schedule"]))
+
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        res = kernels_bench.run()
+        all_results["kernels"] = res
+        for k, v in res.items():
+            _emit(f"kernels/{k}", v, "interpret-mode")
+
+    if want("roofline"):
+        from benchmarks import roofline
+        rows = roofline.run()
+        all_results["roofline"] = rows
+        for r in rows:
+            if r["mesh"] == "single":
+                _emit(f"roofline/{r['arch']}/{r['shape']}",
+                      max(r['t_compute_s'], r['t_memory_s'],
+                          r['t_collective_s']) * 1e6,
+                      f"dom={r['dominant']};"
+                      f"roofline={100*r['roofline_fraction']:.1f}%")
+
+    with open(os.path.join(RESULTS_DIR, "bench_results.json"), "w") as f:
+        json.dump(all_results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

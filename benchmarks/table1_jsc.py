@@ -1,0 +1,103 @@
+"""Table I reproduction: NullaNet Tiny vs LogicNets on JSC-S/M/L.
+
+Per architecture:
+  * train with the paper's flow (QAT w/ per-layer activation selection +
+    gradual FCP), compile to logic, espresso+DC minimize, map to 6-LUTs;
+  * the LogicNets baseline maps the SAME trained truth tables without
+    two-level minimization (raw LUT-RAM cascades), matching how LogicNets
+    realises neurons;
+  * report accuracy, LUTs, FFs, fmax and the NullaNet/LogicNets ratios —
+    the paper's claim structure (Dec. x / Inc. x columns).
+
+Synthetic-data caveat (DESIGN.md §7): absolute accuracy differs from the
+paper; the reproduced quantities are the ratios and orderings.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.jsc import JSC
+from repro.core.logic_infer import hardware_report
+from repro.data.jsc import train_test
+from repro.models.mlp import to_logic
+from repro.train.jsc_trainer import train_jsc
+
+
+def _logicnets_cfg(cfg):
+    """LogicNets-style realisation of the same topology.
+
+    LogicNets (like its published JSC configs) spends MORE bits per
+    neuron input to reach comparable accuracy without NullaNet Tiny's
+    QAT machinery, and maps each neuron's raw truth table (no two-level
+    minimization, no don't-cares). We model it as the same topology at
+    +1 bit everywhere — which indeed trains to slightly HIGHER accuracy
+    (paper Table I: LogicNets is 1.5-1.9 pts BELOW NullaNet instead;
+    our synthetic task flips the small accuracy delta, see
+    EXPERIMENTS.md) — and charge the LUT-RAM cascade for its
+    fanin x bits-wide tables.
+    """
+    import dataclasses
+    return dataclasses.replace(
+        cfg, in_bits=cfg.in_bits + 1,
+        act_bits=tuple(b + 1 for b in cfg.act_bits))
+
+
+def run_one(name: str, steps: int = 1200, seed: int = 0) -> Dict:
+    cfg = JSC[name]
+    data = train_test(20000, 5000, seed)
+    res = train_jsc(cfg, steps=steps, seed=seed, data=data)
+    net = to_logic(cfg, res.params, res.masks, res.bn_state)
+
+    t0 = time.time()
+    mini, _ = hardware_report(net, minimize_logic=True)
+    t_min = time.time() - t0
+
+    # LogicNets-style: +1-bit network, raw-table mapping
+    ln_cfg = _logicnets_cfg(cfg)
+    ln_res = train_jsc(ln_cfg, steps=steps, seed=seed, data=data)
+    ln_net = to_logic(ln_cfg, ln_res.params, ln_res.masks, ln_res.bn_state)
+    base, _ = hardware_report(ln_net, minimize_logic=False)
+
+    n_stages = cfg.n_layers + 1  # per-layer pipeline + output reg
+    lat_nn = n_stages * 1e3 / mini.fmax_mhz
+    lat_ln = n_stages * 1e3 / base.fmax_mhz
+    return {
+        "arch": name,
+        "accuracy": res.test_acc,
+        "float_accuracy": res.float_test_acc,
+        "logicnets_accuracy": ln_res.test_acc,
+        "nullanet": {"luts": mini.luts, "ffs": mini.ffs,
+                     "fmax_mhz": round(mini.fmax_mhz, 1),
+                     "latency_ns": round(lat_nn, 2)},
+        "logicnets_baseline": {"luts": base.luts, "ffs": base.ffs,
+                               "fmax_mhz": round(base.fmax_mhz, 1),
+                               "latency_ns": round(lat_ln, 2)},
+        "lut_reduction_x": round(base.luts / max(mini.luts, 1), 2),
+        "fmax_increase_x": round(mini.fmax_mhz / base.fmax_mhz, 2),
+        "latency_reduction_x": round(lat_ln / max(lat_nn, 1e-9), 2),
+        "minimize_seconds": round(t_min, 1),
+    }
+
+
+def run(steps: int = 1200) -> Dict:
+    out = {}
+    for name in ("jsc-s", "jsc-m", "jsc-l"):
+        out[name] = run_one(name, steps=steps)
+        r = out[name]
+        print(f"[table1] {name}: acc={r['accuracy']:.4f} "
+              f"(LN {r['logicnets_accuracy']:.4f}, "
+              f"float {r['float_accuracy']:.4f}) "
+              f"LUTs {r['nullanet']['luts']} vs {r['logicnets_baseline']['luts']} "
+              f"({r['lut_reduction_x']}x) "
+              f"fmax {r['nullanet']['fmax_mhz']}MHz "
+              f"({r['fmax_increase_x']}x) "
+              f"lat ({r['latency_reduction_x']}x)", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

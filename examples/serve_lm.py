@@ -1,0 +1,32 @@
+"""Continuous-batching LM serving on a smoke config: prefill + slot pool
++ per-tick decode, the same decode_step the multi-pod dry-run lowers at
+(arch x decode_32k/long_500k).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import lm
+from repro.serving.engine import LMEngine, LMRequest
+
+cfg = get_arch("hymba-1.5b", smoke=True)  # hybrid attn+SSM, ring cache
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+eng = LMEngine(cfg, params, n_slots=4, max_seq=160)
+
+rng = np.random.default_rng(0)
+reqs = [LMRequest(prompt=rng.integers(0, cfg.vocab_size,
+                                      rng.integers(8, 32),
+                                      dtype=np.int32),
+                  max_new_tokens=12) for _ in range(10)]
+t0 = time.perf_counter()
+done = eng.run(reqs)
+dt = time.perf_counter() - t0
+tokens = sum(len(r.out_tokens) for r in done)
+print(f"served {len(done)} requests / {tokens} tokens in {dt:.2f}s "
+      f"({tokens/dt:.1f} tok/s on 1 CPU core)")
+for i, r in enumerate(done[:3]):
+    print(f"  req{i}: prompt_len={len(r.prompt)} -> {r.out_tokens}")

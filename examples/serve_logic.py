@@ -1,0 +1,36 @@
+"""End-to-end serving driver (the paper's deployment scenario).
+
+Trains the JSC-S classifier, compiles it to fixed-function logic, and
+serves batched classification requests through the LogicEngine with
+latency percentiles — the software twin of the sub-microsecond FPGA
+pipeline, including the Pallas lut_layer execution path.
+
+  PYTHONPATH=src python examples/serve_logic.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.jsc import JSC_DEMO
+from repro.data.jsc import train_test
+from repro.models.mlp import to_logic
+from repro.serving.engine import LogicEngine
+from repro.train.jsc_trainer import train_jsc
+
+cfg = JSC_DEMO
+data = train_test(8000, 2000, seed=0)
+
+print("training + compiling ...")
+res = train_jsc(cfg, steps=500, data=data)
+net = to_logic(cfg, res.params, res.masks, res.bn_state)
+
+for use_pallas in (False, True):
+    eng = LogicEngine(net, cfg.n_classes, max_batch=256,
+                      use_pallas=use_pallas)
+    xte, yte = data[1]
+    requests = [xte[i * 128: (i + 1) * 128] for i in range(12)]
+    results, stats = eng.serve_queue(requests)
+    acc = float(np.mean(np.concatenate(results) == yte[: 12 * 128]))
+    tag = "pallas" if use_pallas else "jnp   "
+    print(f"[{tag}] 12 requests x128: acc={acc:.4f} "
+          f"p50={stats['p50_us']:.0f}us p95={stats['p95_us']:.0f}us")

@@ -1,0 +1,16 @@
+"""NullaNet Tiny core: QAT + FCP + truth tables + logic minimization.
+
+Public API:
+    quant      — STE quantizers (sign/binary/PACT/signed/DoReFa), per-layer
+                 activation selection, BN folding.
+    fcp        — fanin-constrained pruning (gradual + ADMM).
+    truthtable — neuron -> truth-table enumeration.
+    espresso   — two-level minimization (espresso-lite).
+    lutmap     — 6-LUT mapping + fmax/FF cost model.
+    netlist    — Verilog emission.
+    logic_infer— JAX execution of compiled logic networks.
+"""
+from . import espresso, fcp, lutmap, quant, truthtable  # noqa: F401
+from .logic_infer import (LogicNetwork, classify, compile_mlp_to_logic,  # noqa: F401
+                          hardware_report, logic_layer_apply)
+from .quant import ActQuantSpec, select_activation  # noqa: F401

@@ -1,0 +1,149 @@
+"""Fanin-constrained pruning (FCP) — NullaNet Tiny §FCP.
+
+Caps the number of *distinct inputs* feeding each neuron at ``fanin`` so
+that truth-table enumeration over 2^(fanin·bits) combinations is feasible.
+
+Two schedules, per the paper:
+  * gradual pruning (Zhu & Gupta 2018): fanin shrinks along a cubic
+    schedule during training; at each update the per-row top-k |w| survive.
+  * ADMM (Boyd et al.; Zhang et al. 2018): auxiliary variable Z projected
+    onto the fanin-K set, dual U, quadratic penalty rho/2 ||W - Z + U||^2
+    added to the loss; W converges to a fanin-K matrix.
+
+Masks are row-structured: mask[j] selects <= K columns of weight row j.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def topk_row_mask(w: Array, fanin: int) -> Array:
+    """Boolean mask keeping the ``fanin`` largest-|w| entries of each row.
+
+    w: (out, in). Deterministic tie-break by column index (lower wins),
+    which keeps the mask stable under recompilation.
+    """
+    out_dim, in_dim = w.shape
+    k = min(fanin, in_dim)
+    mag = jnp.abs(w)
+    # stable tie-break: subtract a tiny index-based epsilon
+    tie = jnp.arange(in_dim, dtype=w.dtype) * jnp.asarray(1e-12, w.dtype)
+    score = mag - tie
+    thresh = jax.lax.top_k(score, k)[0][:, -1:]
+    mask = score >= thresh
+    return mask
+
+
+def project_fanin(w: Array, fanin: int) -> Array:
+    """Euclidean projection of w onto {matrices with row fanin <= K}."""
+    return jnp.where(topk_row_mask(w, fanin), w, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Gradual (Zhu–Gupta) schedule, adapted from sparsity to fanin
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GradualFCP:
+    """Cubic fanin schedule: fanin_t goes in_dim -> target over steps
+    [begin, end], updated every ``freq`` steps."""
+
+    target_fanin: int
+    begin_step: int = 0
+    end_step: int = 1000
+    freq: int = 50
+
+    def fanin_at(self, step: int, in_dim: int) -> Array:
+        """Current fanin budget (traced-friendly: works on jnp scalars)."""
+        step = jnp.asarray(step, jnp.float32)
+        b, e = float(self.begin_step), float(self.end_step)
+        frac = jnp.clip((step - b) / max(e - b, 1.0), 0.0, 1.0)
+        # cubic decay of the *excess* fanin (Zhu–Gupta form)
+        excess = (in_dim - self.target_fanin) * (1.0 - frac) ** 3
+        return jnp.round(self.target_fanin + excess).astype(jnp.int32)
+
+    def update_mask(self, w: Array, step: int) -> Array:
+        """Recompute the mask for the current schedule point.
+
+        Called outside jit every ``freq`` steps (mask is part of the train
+        state); uses concrete python ints for top_k k.
+        """
+        in_dim = w.shape[1]
+        fanin = int(self.fanin_at(step, in_dim))
+        return topk_row_mask(w, fanin)
+
+
+# ---------------------------------------------------------------------------
+# ADMM schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdmmFCP:
+    """ADMM fanin pruning.
+
+    State per weight: (Z, U). Every ``dual_freq`` steps:
+        Z <- project_fanin(W + U, K);  U <- U + W - Z
+    Training loss gains  rho/2 * ||W - Z + U||^2  (see ``penalty``).
+    After convergence call ``finalize`` to hard-project W.
+    """
+
+    target_fanin: int
+    rho: float = 1e-3
+    dual_freq: int = 100
+
+    def init_state(self, w: Array) -> Tuple[Array, Array]:
+        return project_fanin(w, self.target_fanin), jnp.zeros_like(w)
+
+    def dual_update(self, w: Array, z: Array, u: Array) -> Tuple[Array, Array]:
+        z_new = project_fanin(w + u, self.target_fanin)
+        u_new = u + w - z_new
+        return z_new, u_new
+
+    def penalty(self, w: Array, z: Array, u: Array) -> Array:
+        d = w - z + u
+        return 0.5 * self.rho * jnp.sum(d * d)
+
+    def finalize(self, w: Array) -> Tuple[Array, Array]:
+        mask = topk_row_mask(w, self.target_fanin)
+        return jnp.where(mask, w, 0.0), mask
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers
+# ---------------------------------------------------------------------------
+
+def row_fanins(mask_or_w: Array) -> Array:
+    """Number of non-zero inputs per output neuron."""
+    return jnp.sum(jnp.asarray(mask_or_w) != 0, axis=1).astype(jnp.int32)
+
+
+def fanin_indices(mask: Array, fanin: int):
+    """Dense (out, fanin) column-index matrix from a row mask.
+
+    Rows with fewer than ``fanin`` survivors are padded by repeating the
+    first surviving index (weight 0 there keeps semantics exact). Returns
+    (idx, valid) as numpy-compatible jnp arrays; evaluated eagerly at
+    conversion time (not inside jit).
+    """
+    import numpy as np
+
+    m = np.asarray(mask)
+    out_dim = m.shape[0]
+    idx = np.zeros((out_dim, fanin), dtype=np.int32)
+    valid = np.zeros((out_dim, fanin), dtype=bool)
+    for j in range(out_dim):
+        cols = np.nonzero(m[j])[0]
+        if len(cols) == 0:
+            cols = np.array([0])
+        take = cols[:fanin]
+        idx[j, : len(take)] = take
+        valid[j, : len(take)] = True
+        if len(take) < fanin:
+            idx[j, len(take):] = take[0] if len(take) else 0
+    return jnp.asarray(idx), jnp.asarray(valid)

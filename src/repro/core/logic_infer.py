@@ -1,0 +1,185 @@
+"""Execution of a compiled logic network in JAX (TPU-native analogue of
+the FPGA LUT fabric).
+
+A ``LogicNetwork`` is a sequence of ``LayerTables``; inference is a chain
+of bit-pack + table-gather operations — the TPU's VMEM-resident gather
+plays the role of the LUT. Both a pure-jnp path (the oracle) and a Pallas
+path (``repro.kernels.lut_layer``) are provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import ActQuantSpec, encode_levels
+from .truthtable import LayerTables, table_index
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LogicNetwork:
+    """Fixed-function network: input quantizer + per-layer truth tables."""
+
+    layers: List[LayerTables]
+    in_spec: ActQuantSpec
+    in_alpha: float
+    n_inputs: int
+    n_outputs: int
+
+    def quantize_inputs(self, x: Array) -> Array:
+        """Real inputs -> integer level codes."""
+        from .quant import apply_act_quant
+        q = apply_act_quant(self.in_spec, x, jnp.asarray(self.in_alpha, x.dtype))
+        return encode_levels(self.in_spec, q, self.in_alpha)
+
+    def apply_codes(self, codes: Array, use_pallas: bool = False) -> Array:
+        """codes: (batch, n_inputs) int32 -> output codes (batch, n_out)."""
+        for lt in self.layers:
+            codes = logic_layer_apply(lt, codes, use_pallas=use_pallas)
+        return codes
+
+    def __call__(self, x: Array, use_pallas: bool = False) -> Array:
+        """Real inputs -> decoded real outputs of the last layer."""
+        codes = self.quantize_inputs(x)
+        out_codes = self.apply_codes(codes, use_pallas=use_pallas)
+        last = self.layers[-1]
+        levels = jnp.asarray(last.out_spec.levels(last.out_alpha))
+        return levels[out_codes]
+
+
+def logic_layer_apply(lt: LayerTables, codes: Array,
+                      use_pallas: bool = False) -> Array:
+    """Apply one truth-table layer: (batch, n_in) codes -> (batch, N)."""
+    tables = jnp.asarray(lt.tables)
+    idx = jnp.asarray(lt.fanin_idx)
+    if use_pallas:
+        from repro.kernels.lut_layer.ops import lut_layer
+        return lut_layer(codes, idx, tables, lt.in_spec.n_levels)
+    # pure-jnp oracle
+    gathered = codes[:, idx]                       # (batch, N, K)
+    rows = table_index(gathered, lt.in_spec.n_levels)  # (batch, N)
+    return _gather_tables(tables, rows)
+
+
+def _gather_tables(tables: Array, rows: Array) -> Array:
+    """tables: (N, R) codes; rows: (batch, N) row index per neuron."""
+    tables = tables.astype(jnp.int32)
+    # vmap over neurons: out[b, j] = tables[j, rows[b, j]]
+    return jax.vmap(lambda t, r: t[r], in_axes=(0, 1), out_axes=1)(tables, rows)
+
+
+def classify(net: LogicNetwork, x: Array, classes: int,
+             use_pallas: bool = False) -> Array:
+    """Argmax classification over decoded last-layer values.
+
+    The last layer has ``classes`` neurons whose multi-bit output codes act
+    as per-class scores (the paper keeps the output layer's quantized
+    scores and takes argmax — fixed-function comparators on chip)."""
+    vals = net(x, use_pallas=use_pallas)
+    return jnp.argmax(vals[..., :classes], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Conversion driver: trained QAT+FCP MLP -> LogicNetwork
+# ---------------------------------------------------------------------------
+
+def compile_mlp_to_logic(params: dict, specs: Sequence[ActQuantSpec],
+                         alphas: Sequence[float], masks: Sequence[np.ndarray],
+                         fanins: Sequence[int], in_spec: ActQuantSpec,
+                         in_alpha: float) -> LogicNetwork:
+    """Compile a trained quantized MLP (see models/mlp.py) to logic.
+
+    params: {'layers': [{'w','b', optional bn stats}...]}.
+    specs/alphas: *output* activation spec per layer.
+    """
+    from .truthtable import extract_layer_tables
+
+    layer_tables: List[LayerTables] = []
+    prev_spec, prev_alpha = in_spec, in_alpha
+    for i, lp in enumerate(params["layers"]):
+        lt = extract_layer_tables(
+            w=lp["w"], b=lp["b"], mask=masks[i],
+            in_spec=prev_spec, out_spec=specs[i],
+            in_alpha=prev_alpha, out_alpha=float(alphas[i]),
+            fanin=fanins[i],
+            gamma=lp.get("bn_gamma"), beta=lp.get("bn_beta"),
+            bn_mean=lp.get("bn_mean"), bn_var=lp.get("bn_var"),
+        )
+        layer_tables.append(lt)
+        prev_spec, prev_alpha = specs[i], float(alphas[i])
+    n_in = params["layers"][0]["w"].shape[1]
+    n_out = params["layers"][-1]["w"].shape[0]
+    return LogicNetwork(layer_tables, in_spec, float(in_alpha), n_in, n_out)
+
+
+# ---------------------------------------------------------------------------
+# Hardware report for a LogicNetwork (espresso + lutmap pipeline)
+# ---------------------------------------------------------------------------
+
+def hardware_report(net: LogicNetwork, minimize_logic: bool = True):
+    """Run two-level minimization + LUT mapping over every neuron.
+
+    Returns (MapReport, per-layer list). ``minimize_logic=False`` gives the
+    LogicNets-style baseline cost (raw table mapping, no espresso).
+    """
+    from .espresso import minimize, verify
+    from .lutmap import (MapReport, logicnets_lut_cost, map_cover,
+                         map_layer, map_network)
+    from .truthtable import onset_of
+
+    per_layer = []
+    for lt in net.layers:
+        out_bits = lt.out_spec.code_bits
+        in_bits = lt.in_spec.code_bits
+        fanin_bits = lt.fanin * in_bits
+        neuron_reports = []
+        for j in range(lt.n_neurons):
+            table = np.asarray(lt.tables[j])
+            if minimize_logic:
+                # codes -> bit-level onsets; one Boolean fn per output bit.
+                # Input row index == packed code index only when levels are
+                # powers of two; our specs guarantee that (code_bits).
+                rep = MapReport(0, 0, 0)
+                for ob in range(out_bits):
+                    onset, dc = _bitexpand(onset_of(table, ob), lt, in_bits)
+                    cov = minimize(onset, dc)
+                    rep = rep + map_cover(cov)
+                neuron_reports.append(rep)
+            else:
+                neuron_reports.append(logicnets_lut_cost(fanin_bits, out_bits))
+        per_layer.append(
+            map_layer(neuron_reports, out_bits * lt.n_neurons))
+    return map_network(per_layer), per_layer
+
+
+def _bitexpand(onset_codes: np.ndarray, lt: LayerTables, in_bits: int):
+    """Re-index an onset from code-radix rows to bit-packed rows.
+
+    Table rows are indexed in radix n_levels per fanin; Boolean
+    minimization wants radix-2 per *bit*. When n_levels is a power of two
+    the mappings coincide (empty DC set); otherwise bit rows containing
+    an unused code become DON'T CARES — they can never occur at runtime,
+    and handing them to ESPRESSO is precisely how the paper shrinks the
+    two-level covers. Returns (onset, dc)."""
+    n_levels = lt.in_spec.n_levels
+    k = lt.fanin
+    n_bit_rows = 1 << (k * in_bits)
+    if n_levels == (1 << in_bits):
+        return onset_codes, None  # already aligned, fully specified
+    out = np.zeros(n_bit_rows, bool)
+    reachable = np.zeros(n_bit_rows, bool)
+    codes = np.arange(len(onset_codes))
+    digits = np.empty((len(codes), k), np.int64)
+    for i in range(k):
+        digits[:, i] = (codes // (n_levels ** i)) % n_levels
+    bit_rows = np.zeros(len(codes), np.int64)
+    for i in range(k):
+        bit_rows |= digits[:, i] << (i * in_bits)
+    out[bit_rows] = onset_codes
+    reachable[bit_rows] = True
+    return out, ~reachable

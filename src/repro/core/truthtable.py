@@ -1,0 +1,165 @@
+"""Truth-table extraction — NullaNet Tiny's core conversion step.
+
+For each neuron j with fanin set S_j (|S_j| = K) and b-bit quantized
+inputs, enumerate all (2^b)^K input combinations, push them through
+(folded-BN) MAC + output activation quantizer, and record the output
+*level codes*. MAC + BN + activation collapse into one lookup table —
+the "fixed-function combinational logic" of the paper title.
+
+Tables are stored code-indexed: index = sum_k code_k * n_levels^k
+(little-endian in fanin position k). For binary activations this is the
+classic bit-packed truth-table index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import ActQuantSpec, apply_act_quant, encode_levels
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class NeuronTable:
+    """Truth table of one neuron: fanin indices + output code per row."""
+
+    fanin_idx: np.ndarray      # (K,) int32 — columns of the input vector
+    table: np.ndarray          # (n_levels_in ** K,) int8/int16 output codes
+    n_levels_in: int
+    n_levels_out: int
+
+    @property
+    def fanin(self) -> int:
+        return int(self.fanin_idx.shape[0])
+
+
+@dataclasses.dataclass
+class LayerTables:
+    """All neuron tables of one layer (homogeneous fanin K)."""
+
+    fanin_idx: np.ndarray      # (N, K)
+    tables: np.ndarray         # (N, n_levels_in ** K)
+    in_spec: ActQuantSpec
+    out_spec: ActQuantSpec
+    in_alpha: float
+    out_alpha: float
+
+    @property
+    def n_neurons(self) -> int:
+        return int(self.tables.shape[0])
+
+    @property
+    def fanin(self) -> int:
+        return int(self.fanin_idx.shape[1])
+
+    def neuron(self, j: int) -> NeuronTable:
+        return NeuronTable(
+            fanin_idx=self.fanin_idx[j],
+            table=self.tables[j],
+            n_levels_in=self.in_spec.n_levels,
+            n_levels_out=self.out_spec.n_levels,
+        )
+
+
+def enumerate_codes(n_levels: int, fanin: int) -> np.ndarray:
+    """All (n_levels^K, K) input code combinations, little-endian."""
+    n_rows = n_levels ** fanin
+    if n_rows > (1 << 24):
+        raise ValueError(
+            f"enumeration of {n_levels}^{fanin} = {n_rows} rows is infeasible; "
+            "tighten the fanin constraint (this is exactly why the paper "
+            "applies FCP before conversion)")
+    rows = np.arange(n_rows, dtype=np.int64)
+    combos = np.empty((n_rows, fanin), dtype=np.int32)
+    for k in range(fanin):
+        combos[:, k] = (rows // (n_levels ** k)) % n_levels
+    return combos
+
+
+def extract_layer_tables(
+    w: Array,
+    b: Array,
+    mask: Array,
+    in_spec: ActQuantSpec,
+    out_spec: ActQuantSpec,
+    in_alpha: float,
+    out_alpha: float,
+    fanin: int,
+    gamma: Optional[Array] = None,
+    beta: Optional[Array] = None,
+    bn_mean: Optional[Array] = None,
+    bn_var: Optional[Array] = None,
+) -> LayerTables:
+    """Convert one fanin-pruned quantized linear(+BN)+act layer to tables.
+
+    w: (out, in) weights (already trained & masked), b: (out,) bias.
+    The enumeration is fully vectorised: one (2^bK, K) combo matrix is
+    shared by all neurons; per-neuron weights are gathered via fanin_idx.
+    """
+    from .fcp import fanin_indices
+    from .quant import fold_bn
+
+    w = jnp.where(jnp.asarray(mask, bool), w, 0.0)
+    if gamma is not None:
+        w, b = fold_bn(w, b, gamma, beta, bn_mean, bn_var)
+
+    idx, _valid = fanin_indices(np.asarray(mask), fanin)  # (N, K)
+    n_levels_in = in_spec.n_levels
+    combos = enumerate_codes(n_levels_in, fanin)           # (R, K) codes
+    in_levels = np.asarray(in_spec.levels(in_alpha))       # (n_levels_in,)
+    combo_vals = in_levels[combos]                          # (R, K) real values
+
+    w_np = np.asarray(w, np.float64)
+    b_np = np.asarray(b, np.float64)
+    idx_np = np.asarray(idx)
+    n = w_np.shape[0]
+
+    # gather per-neuron fanin weights: (N, K)
+    wk = np.take_along_axis(w_np, idx_np, axis=1)
+    # Padded duplicate indices would double-count a weight; zero all but the
+    # first occurrence of each column within a row.
+    for j in range(n):
+        seen = {}
+        for k in range(idx_np.shape[1]):
+            c = int(idx_np[j, k])
+            if c in seen:
+                wk[j, k] = 0.0
+            else:
+                seen[c] = k
+
+    # pre-activations for every neuron and combo: (N, R)
+    pre = wk @ combo_vals.T + b_np[:, None]
+
+    # output activation quantizer -> codes
+    pre_j = jnp.asarray(pre, jnp.float32)
+    q = apply_act_quant(out_spec, pre_j, jnp.asarray(out_alpha, jnp.float32))
+    codes = encode_levels(out_spec, q, out_alpha)
+    tables = np.asarray(codes, np.int32)
+    dt = np.int8 if out_spec.n_levels <= 127 else np.int16
+    return LayerTables(
+        fanin_idx=idx_np.astype(np.int32),
+        tables=tables.astype(dt),
+        in_spec=in_spec,
+        out_spec=out_spec,
+        in_alpha=float(in_alpha),
+        out_alpha=float(out_alpha),
+    )
+
+
+def table_index(codes: Array, n_levels: int) -> Array:
+    """Pack per-fanin codes (…, K) into table row indices (…,)."""
+    k = codes.shape[-1]
+    weights = jnp.asarray([n_levels ** i for i in range(k)], jnp.int32)
+    return jnp.sum(codes * weights, axis=-1)
+
+
+def onset_of(table: np.ndarray, out_bit: int) -> np.ndarray:
+    """Boolean on-set bitmap of one output bit of a (possibly multi-bit)
+    truth table. Multi-bit outputs become ``code_bits`` separate Boolean
+    functions (the paper minimizes each independently)."""
+    return ((table.astype(np.int64) >> out_bit) & 1).astype(bool)

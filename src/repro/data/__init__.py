@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic JSC generator + LM token stream."""

@@ -1,0 +1,35 @@
+"""Public wrapper for fanin_matmul (padding plumbing)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .fanin_matmul import DEFAULT_BB, DEFAULT_BN, fanin_matmul_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fanin_matmul(x: jax.Array, idx: jax.Array, w: jax.Array,
+                 bias: jax.Array, interpret: bool = True) -> jax.Array:
+    """FCP-sparse linear: x (B, n_in), idx/w (N, K), bias (N,) -> (B, N)."""
+    B, n_in = x.shape
+    N, K = idx.shape
+
+    def pad(a, axis, mult, value=0):
+        p = (-a.shape[axis]) % mult
+        if p == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, p)
+        return jnp.pad(a, widths, constant_values=value)
+
+    bb = min(DEFAULT_BB, max(8, B))
+    bn = min(DEFAULT_BN, max(8, N))
+    x_p = pad(x, 0, bb)
+    idx_p = pad(idx.astype(jnp.int32), 0, bn)
+    w_p = pad(w, 0, bn)
+    bias_p = pad(bias, 0, bn)
+    out = fanin_matmul_pallas(x_p, idx_p, w_p, bias_p, K,
+                              block_b=bb, block_n=bn, interpret=interpret)
+    return out[:B, :N]

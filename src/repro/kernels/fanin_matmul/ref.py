@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for fanin_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fanin_matmul_ref(x: jax.Array, idx: jax.Array, w: jax.Array,
+                     bias: jax.Array) -> jax.Array:
+    """y[b, j] = sum_k x[b, idx[j,k]] * w[j,k] + bias[j]."""
+    gathered = x[:, idx]                 # (B, N, K)
+    return jnp.einsum("bnk,nk->bn", gathered, w) + bias[None, :]
+
+
+def dense_equivalent(x: jax.Array, w_dense: jax.Array, bias: jax.Array
+                     ) -> jax.Array:
+    """Dense oracle given the masked dense weight (N, n_in)."""
+    return x @ w_dense.T + bias[None, :]

@@ -1,0 +1,110 @@
+"""Pallas kernel: flash attention forward (online softmax, VMEM-tiled).
+
+TPU mapping of the chunked attention used by the LM at 32k+ contexts:
+per (batch*head, q-block) the kernel streams KV blocks through VMEM,
+maintaining running (max, sum, acc) in f32 scratch — the HBM traffic is
+O(Sq*dh + Sk*dh) instead of O(Sq*Sk), and the MXU sees (bq x dh x bk)
+matmuls with 128-aligned dims.
+
+Grid: (B*H, Sq/bq, Sk/bk); the kv axis revisits the same output block
+(accumulation pattern) with scratch carrying the softmax state. Causal
+and sliding-window masks are applied in-block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_k: int, sk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                  # (bq, dh)
+    k = k_ref[0]                  # (bk, dh)
+    v = v_ref[0]                  # (bk, dh)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    qpos = iq * bq + jnp.arange(bq)
+    kpos = ik * bk + jnp.arange(bk)
+    mask = kpos[None, :] < sk
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _fin():
+        out_ref[0] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "true_sk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = DEFAULT_BQ,
+                           block_k: int = DEFAULT_BK,
+                           true_sk: int = 0,
+                           interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, dh); k, v: (BH, Sk, dh), pre-padded to block multiples.
+
+    ``true_sk`` = KV length before padding (padded slots are masked)."""
+    bh, sq, dh = q.shape
+    sk_pad = k.shape[1]
+    sk = true_sk or sk_pad
+    assert sq % block_q == 0 and sk_pad % block_k == 0
+    n_k = sk_pad // block_k
+    grid = (bh, sq // block_q, n_k)
+    scale = 1.0 / math.sqrt(dh)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, bq=block_q, bk=block_k,
+                          n_k=n_k, sk=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum
+            pltpu.VMEM((block_q, dh), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Public wrapper: multi-head (B, S, H, dh) plumbing + padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh) with H % KV == 0.
+
+    GQA handled by repeating KV head indices into the flattened (B*H)
+    leading dim (no materialised repeat: gather of head slices).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = k.transpose(0, 2, 1, 3)                      # (B, KV, Sk, dh)
+    kf = jnp.repeat(kf, rep, axis=1).reshape(b * h, sk, dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1
+                    ).reshape(b * h, sk, dh)
+
+    bq = min(DEFAULT_BQ, max(8, sq))
+    bk = min(DEFAULT_BK, max(8, sk))
+
+    def pad(a, mult):
+        p = (-a.shape[1]) % mult
+        if p == 0:
+            return a
+        return jnp.pad(a, ((0, 0), (0, p), (0, 0)))
+
+    qp, kp, vp = pad(qf, bq), pad(kf, bk), pad(vf, bk)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, true_sk=sk,
+                                 interpret=interpret)
+    out = out[:, :sq].reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,81 @@
+"""Pallas kernel: truth-table-lookup layer.
+
+The FPGA maps each neuron to a LUT; the TPU analogue keeps each neuron's
+2^(K·b) truth table resident in VMEM and evaluates a batch of inputs as
+
+    rows[b, j] = sum_k codes[b, idx[j, k]] * n_levels^k     (bit-pack)
+    out[b, j]  = tables[j, rows[b, j]]                      (VMEM gather)
+
+Tiling: grid (batch_blocks, neuron_blocks). The code block carries the
+*full* input width (logic-layer widths are small — JSC layers are <= a
+few hundred codes), while neurons and their tables are tiled so the
+per-step VMEM working set is
+
+    bB * N_in * 4  +  bN * (K * 4 + R * 4)  +  bB * bN * 4   bytes,
+
+which for the default bB=128, bN=128, K<=7, R<=2^14 stays well under
+VMEM (~2 MiB at R=4096). Lane alignment: bB multiple of 8, bN multiple
+of 128 where the caller's shapes allow (ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 128   # batch tile (sublane-aligned)
+DEFAULT_BN = 128   # neuron tile (lane-aligned)
+
+
+def _kernel(codes_ref, idx_ref, tables_ref, out_ref, *, n_levels: int,
+            fanin: int):
+    codes = codes_ref[...]            # (bB, N_in) int32
+    idx = idx_ref[...]                # (bN, K)    int32
+    tables = tables_ref[...]          # (bN, R)    int32
+
+    # bit-pack: rows[b, j] = sum_k codes[b, idx[j, k]] * n_levels^k
+    bB = codes.shape[0]
+    bN = idx.shape[0]
+    rows = jnp.zeros((bB, bN), jnp.int32)
+    for k in range(fanin):           # K is tiny and static -> unrolled
+        col = idx[:, k]              # (bN,)
+        gathered = jnp.take(codes, col, axis=1)      # (bB, bN)
+        rows = rows + gathered * (n_levels ** k)
+
+    # table gather: out[b, j] = tables[j, rows[b, j]]
+    out = jnp.take_along_axis(tables, rows.T, axis=1).T  # (bB, bN)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_levels", "fanin", "block_b", "block_n", "interpret"))
+def lut_layer_pallas(codes: jax.Array, idx: jax.Array, tables: jax.Array,
+                     n_levels: int, fanin: int,
+                     block_b: int = DEFAULT_BB, block_n: int = DEFAULT_BN,
+                     interpret: bool = True) -> jax.Array:
+    """codes: (B, N_in) int32; idx: (N, K) int32; tables: (N, R) int32.
+
+    Shapes must be pre-padded to multiples of the block sizes (ops.py
+    handles padding/unpadding).
+    """
+    B, n_in = codes.shape
+    N, K = idx.shape
+    R = tables.shape[1]
+    assert B % block_b == 0 and N % block_n == 0, (B, N, block_b, block_n)
+
+    grid = (B // block_b, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_levels=n_levels, fanin=fanin),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, R), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        interpret=interpret,
+    )(codes, idx, tables)

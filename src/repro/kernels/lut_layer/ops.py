@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the lut_layer Pallas kernel (pads + unpads)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .lut_layer import DEFAULT_BB, DEFAULT_BN, lut_layer_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("n_levels", "interpret"))
+def lut_layer(codes: jax.Array, idx: jax.Array, tables: jax.Array,
+              n_levels: int, interpret: bool = True) -> jax.Array:
+    """Truth-table layer: (B, N_in) codes -> (B, N) output codes."""
+    B, _ = codes.shape
+    N, K = idx.shape
+    bb = min(DEFAULT_BB, max(8, B))
+    bn = min(DEFAULT_BN, max(128, N)) if N >= 128 else N
+    codes_p = _pad_to(codes.astype(jnp.int32), 0, bb)
+    idx_p = _pad_to(idx.astype(jnp.int32), 0, bn)
+    tables_p = _pad_to(tables.astype(jnp.int32), 0, bn)
+    out = lut_layer_pallas(codes_p, idx_p, tables_p, n_levels, K,
+                           block_b=bb, block_n=bn, interpret=interpret)
+    return out[:B, :N]

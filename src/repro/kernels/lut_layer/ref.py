@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the lut_layer kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_layer_ref(codes: jax.Array, idx: jax.Array, tables: jax.Array,
+                  n_levels: int) -> jax.Array:
+    """codes: (B, N_in) int; idx: (N, K); tables: (N, R). -> (B, N) int32."""
+    codes = codes.astype(jnp.int32)
+    tables = tables.astype(jnp.int32)
+    gathered = codes[:, idx]                                  # (B, N, K)
+    k = idx.shape[1]
+    weights = jnp.asarray([n_levels ** i for i in range(k)], jnp.int32)
+    rows = jnp.sum(gathered * weights, axis=-1)               # (B, N)
+    return jax.vmap(lambda t, r: t[r], in_axes=(0, 1), out_axes=1)(
+        tables, rows)

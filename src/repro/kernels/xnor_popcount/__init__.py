@@ -1,0 +1,2 @@
+from .ops import xnor_matmul  # noqa: F401
+from .ref import pack_bipolar, xnor_matmul_ref  # noqa: F401

@@ -1,0 +1,42 @@
+"""Public wrapper: bipolar matmul with packing + padding plumbing."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ref import pack_bipolar
+from .xnor_popcount import (DEFAULT_BB, DEFAULT_BN, DEFAULT_BW,
+                            xnor_matmul_pallas)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def xnor_matmul(x: jax.Array, w: jax.Array, interpret: bool = True
+                ) -> jax.Array:
+    """Bipolar (±1) matmul: x (B, n) @ w (N, n)^T -> (B, N) int32.
+
+    Packs both operands, pads every axis to kernel block multiples, and
+    un-pads the result.
+    """
+    B, n = x.shape
+    N = w.shape[0]
+    xp = pack_bipolar(x)
+    wp = pack_bipolar(w)
+
+    def pad(a, axis, mult):
+        p = (-a.shape[axis]) % mult
+        if p == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, p)
+        return jnp.pad(a, widths)
+
+    bb = min(DEFAULT_BB, max(8, B))
+    bn = min(DEFAULT_BN, max(8, N))
+    bw = min(DEFAULT_BW, xp.shape[1])
+    xp = pad(pad(xp, 0, bb), 1, bw)
+    wp = pad(pad(wp, 0, bn), 1, bw)
+    out = xnor_matmul_pallas(xp, wp, n, block_b=bb, block_n=bn, block_w=bw,
+                             interpret=interpret)
+    return out[:B, :N]

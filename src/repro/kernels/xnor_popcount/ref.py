@@ -1,0 +1,26 @@
+"""Pure-jnp oracle + packing helpers for the xnor_popcount kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_bipolar(x: jax.Array) -> jax.Array:
+    """(±1)-valued (B, n) -> bit-packed (B, ceil(n/32)) uint32 (bit ⇔ +1).
+
+    Little-endian within each word: feature f lands in word f//32 bit f%32.
+    """
+    B, n = x.shape
+    pad = (-n) % 32
+    bits = (x > 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    bits = bits.reshape(B, -1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def xnor_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Float oracle: bipolar dot products. x: (B, n) ±1, w: (N, n) ±1."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32).T).astype(jnp.int32)

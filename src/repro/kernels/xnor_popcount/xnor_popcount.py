@@ -1,0 +1,84 @@
+"""Pallas kernel: bit-packed bipolar (±1) matmul via XNOR + popcount.
+
+For bipolar vectors a, b in {-1, +1}^n packed as bits (1 ⇔ +1):
+
+    a · b = n - 2 * popcount(bits(a) XOR bits(b))
+
+This is the FPGA XNOR-gate MAC adapted to the TPU: 32 MACs collapse into
+one uint32 XOR + popcount on the VPU. Weights arrive pre-packed; the
+kernel tiles (batch × out) and loops the packed contraction dimension in
+VMEM-sized chunks with an int32 accumulator.
+
+Tiling: grid (B/bB, N/bN, W/bW); accumulation across the W axis uses the
+revisiting-output pattern (out block indexed only by (i, j)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 128
+DEFAULT_BN = 128
+DEFAULT_BW = 128   # packed words per step = 4096 binary features
+
+
+def _popcount_u32(v: jax.Array) -> jax.Array:
+    """Branch-free SWAR popcount on uint32 lanes."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _kernel(x_ref, w_ref, out_ref, *, n_features: int, n_w_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]          # (bB, bW) uint32
+    w = w_ref[...]          # (bN, bW) uint32
+    # mismatch popcount: (bB, bN)
+    xor = x[:, None, :] ^ w[None, :, :]
+    mism = jnp.sum(_popcount_u32(xor), axis=-1, dtype=jnp.int32)
+    out_ref[...] += mism
+
+    @pl.when(k == n_w_steps - 1)
+    def _fin():
+        # dot = n_features - 2 * mismatches (padding words are zero in both
+        # operands -> XOR 0 -> no mismatch contribution).
+        out_ref[...] = n_features - 2 * out_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_features", "block_b", "block_n", "block_w",
+                              "interpret"))
+def xnor_matmul_pallas(x_packed: jax.Array, w_packed: jax.Array,
+                       n_features: int,
+                       block_b: int = DEFAULT_BB, block_n: int = DEFAULT_BN,
+                       block_w: int = DEFAULT_BW,
+                       interpret: bool = True) -> jax.Array:
+    """x_packed: (B, W) uint32; w_packed: (N, W) uint32 -> (B, N) int32."""
+    B, W = x_packed.shape
+    N, W2 = w_packed.shape
+    assert W == W2
+    assert B % block_b == 0 and N % block_n == 0 and W % block_w == 0
+
+    grid = (B // block_b, N // block_n, W // block_w)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_features=n_features,
+                          n_w_steps=W // block_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_w), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_w), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        interpret=interpret,
+    )(x_packed, w_packed)

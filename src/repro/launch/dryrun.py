@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# ^ MUST precede any other import: jax locks the device count on first
+#   init, and the dry-run needs 512 placeholder host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+propagation succeeds, the compiled memory footprint fits a v5e, and the
+HLO collective schedule is extractable for the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out benchmarks/results/dryrun
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch, input_specs  # noqa: E402
+from repro.configs.base import ArchConfig, ShapeConfig  # noqa: E402
+from repro.dist import shardings as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.train.loop import TrainState, make_train_step  # noqa: E402
+from repro.train.optim import AdamW  # noqa: E402
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    Output bytes are the standard proxy: all-reduce/permute outputs equal
+    inputs; all-gather outputs are the gathered (wire-crossing) size;
+    reduce-scatter wire bytes are its *input*, approximated by output *
+    shard-count upstream (we report both raw sums and a per-op table).
+    """
+    sums = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (\w[\w\-]*)\(", stripped)
+        if not m:
+            continue
+        shapes_str, opname = m.groups()
+        base = opname.rstrip("0123456789.").rstrip("-start").rstrip(".")
+        hit = None
+        for c in _COLLECTIVES:
+            if opname.startswith(c):
+                hit = c
+                break
+        if hit is None:
+            continue
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        sums[hit] += nbytes
+        counts[hit] += 1
+    return {"bytes": sums, "counts": counts,
+            "total_bytes": sum(sums.values())}
+
+
+def _sds(tree):
+    """Pytree -> ShapeDtypeStruct pytree."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, args_shapes, in_shardings, out_shardings, donate)."""
+    specs = input_specs(cfg, shape)
+    batch_shardings = sh.batch_shardings(mesh, specs)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        mixed = sh.OPTS["bf16_params"]
+        opt = AdamW(lr=1e-4, mixed_precision=mixed)
+        step_fn = make_train_step(cfg, opt)
+        params_shapes = jax.eval_shape(
+            lambda k: opt.cast_params(lm.init_params(cfg, k)),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        p_sh = sh.params_shardings(mesh, params_shapes)
+        state_shapes = TrainState(params_shapes, opt_shapes, None)
+        state_sh = TrainState(
+            p_sh,
+            type(opt_shapes)(repl, p_sh, p_sh,
+                             p_sh if mixed else None),
+            None)
+        metric_sh = {"loss": repl, "grad_norm": repl, "step": repl}
+
+        def fn(state, batch):
+            return step_fn(state, batch)
+
+        return (fn, (state_shapes, specs), (state_sh, batch_shardings),
+                (state_sh, metric_sh), (0,))
+
+    params_shapes = jax.eval_shape(
+        lambda k: lm.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_sh = sh.params_shardings(mesh, params_shapes)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(cfg, params, **batch)
+
+        cache_shapes = jax.eval_shape(
+            lambda p, b: fn(p, b), params_shapes, specs)[1]
+        cache_sh = sh.cache_pspec(mesh, cache_shapes)
+        logits_sh = NamedSharding(
+            mesh, P(sh._dp_for(mesh, shape.global_batch), "model"))
+        return (fn, (params_shapes, specs), (p_sh, batch_shardings),
+                (logits_sh, cache_sh), ())
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    enc_frames = (S // cfg.frontend_frames_div) if cfg.is_encdec else 0
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, S, enc_frames))
+    cache_sh = sh.cache_pspec(mesh, cache_shapes)
+
+    def fn(params, cache, batch):
+        return lm.decode_step(cfg, params, cache, batch["tokens"],
+                              batch["positions"])
+
+    logits_sh = NamedSharding(
+        mesh, P(sh._dp_for(mesh, shape.global_batch), "model"))
+    return (fn, (params_shapes, cache_shapes, specs),
+            (p_sh, cache_sh, batch_shardings),
+            (logits_sh, cache_sh), (1,))
+
+
+def _cell_costs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict:
+    """Lower+compile one config; return flops/bytes/collectives."""
+    with sh.use_mesh(mesh):
+        fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def extrapolate_scan_costs(cfg: ArchConfig, shape: ShapeConfig, mesh
+                           ) -> Dict:
+    """XLA's cost_analysis counts a while(scan-over-layers) body ONCE.
+
+    Recover true totals by the 2-point fit: lower the same step with 1
+    and 2 layers; body = f(2) - f(1), outside = f(1) - body, total =
+    outside + L * body. Applied to FLOPs, bytes and collective bytes.
+    """
+    import dataclasses as dc
+
+    from repro.models import scan_utils as SU
+    L = cfg.n_layers
+    kw1 = {"n_layers": 1}
+    kw2 = {"n_layers": 2}
+    if cfg.is_encdec:
+        kw1["n_enc_layers"] = 1
+        kw2["n_enc_layers"] = 2
+    with SU.unrolled():  # expose true per-iteration costs to cost_analysis
+        c1 = _cell_costs(dc.replace(cfg, **kw1), shape, mesh)
+        c2 = _cell_costs(dc.replace(cfg, **kw2), shape, mesh)
+
+    def fit(a, b):
+        body = max(b - a, 0.0)
+        outside = max(a - body, 0.0)
+        return outside + L * body
+
+    coll_fit = {}
+    for key in c1["coll"]["bytes"]:
+        coll_fit[key] = fit(c1["coll"]["bytes"][key],
+                            c2["coll"]["bytes"][key])
+    return {
+        "flops_per_device": fit(c1["flops"], c2["flops"]),
+        "bytes_accessed_per_device": fit(c1["bytes"], c2["bytes"]),
+        "collective_bytes": coll_fit,
+        "collective_total_bytes": sum(coll_fit.values()),
+        "fit_points": {"L1": c1, "L2": c2},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: Optional[str] = None) -> Dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full-attention arch at 500k context "
+                          "(see DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with sh.use_mesh(mesh):
+        fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": float(cost.get("flops", -1.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0)),
+        "collectives": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[k] = int(v)
+    # true per-step totals (scan bodies re-multiplied by trip count)
+    result["extrapolated"] = extrapolate_scan_costs(cfg, shape, mesh)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opts", default="",
+                    help="comma list of sharding-strategy knobs: "
+                         "seq_parallel,serve_tp_only,moe_ep "
+                         "(EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+    if args.opts:
+        sh.set_opts(**{k: True for k in args.opts.split(",") if k})
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": repr(e)}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "ok":
+                    print(f"  ok: flops/dev={res['flops_per_device']:.3e} "
+                          f"coll={res['collectives']['total_bytes']:.3e}B "
+                          f"compile={res['compile_s']}s", flush=True)
+                elif res["status"] == "skipped":
+                    print(f"  skipped: {res['reason']}")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Serving launcher: logic-network classification or LM decode.
+
+  # paper's product: compiled fixed-function logic serving
+  PYTHONPATH=src python -m repro.launch.serve --mode logic --jsc jsc-s
+
+  # continuous-batching LM decode on a smoke config
+  PYTHONPATH=src python -m repro.launch.serve --mode lm --arch glm4-9b \
+      --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+
+
+def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
+                use_pallas: bool):
+    from repro.configs.jsc import JSC
+    from repro.data.jsc import train_test
+    from repro.models.mlp import to_logic
+    from repro.serving.engine import LogicEngine
+    from repro.train.jsc_trainer import train_jsc
+
+    cfg = JSC[jsc_name]
+    print(f"[serve] training {jsc_name} with QAT+FCP ({train_steps} steps)")
+    res = train_jsc(cfg, steps=train_steps)
+    print(f"  test acc: {res.test_acc:.4f}")
+    print("[serve] compiling to fixed-function logic ...")
+    net = to_logic(cfg, res.params, res.masks, res.bn_state)
+    eng = LogicEngine(net, cfg.n_classes, use_pallas=use_pallas)
+    (_, _), (xte, yte) = train_test()
+    reqs = [xte[i * 64: (i + 1) * 64] for i in range(n_requests)]
+    results, stats = eng.serve_queue(reqs)
+    acc = float(np.mean(np.concatenate(results)
+                        == yte[: sum(len(r) for r in reqs)]))
+    print(f"[serve] {n_requests} requests: acc={acc:.4f} "
+          f"p50={stats['p50_us']:.1f}us p95={stats['p95_us']:.1f}us")
+    return stats
+
+
+def serve_lm(arch: str, smoke: bool, n_requests: int, max_new: int):
+    from repro.models import lm
+    from repro.serving.engine import LMEngine, LMRequest
+
+    cfg = get_arch(arch, smoke=smoke)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = LMEngine(cfg, params, n_slots=4, max_seq=256)
+    rng = np.random.default_rng(0)
+    reqs = [LMRequest(prompt=rng.integers(0, cfg.vocab_size, 32,
+                                          dtype=np.int32),
+                      max_new_tokens=max_new) for _ in range(n_requests)]
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    tok = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {len(done)} requests, {tok} tokens in {dt:.2f}s "
+          f"({tok/dt:.1f} tok/s)")
+    return done
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["logic", "lm"], default="logic")
+    ap.add_argument("--jsc", default="jsc-s")
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args(argv)
+    if args.mode == "logic":
+        serve_logic(args.jsc, args.train_steps, args.requests, args.pallas)
+    else:
+        serve_lm(args.arch, args.smoke, args.requests, args.max_new)
+
+
+if __name__ == "__main__":
+    main()

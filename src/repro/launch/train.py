@@ -1,0 +1,93 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Full-size archs expect a real pod (the mesh asserts device count);
+``--smoke`` trains the reduced config on local devices — the same code
+path the examples and integration tests use. ``--model-par``>1 exercises
+tensor parallelism on local (or forced-host) devices.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import lm_batch, sharded_batch
+from repro.dist import shardings as sh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.loop import Trainer, init_state, make_train_step
+from repro.train.optim import AdamW
+from repro.train.schedules import warmup_cosine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "sign"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 (or 2x16x16 with --multi-pod) mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_host_mesh(model_par=args.model_par)
+
+    opt = AdamW(lr=warmup_cosine(args.lr, args.steps // 10, args.steps),
+                weight_decay=0.01, grad_clip=1.0)
+    step_fn = make_train_step(cfg, opt, compress=args.compress,
+                              grad_accum=args.grad_accum)
+
+    with sh.use_mesh(mesh):
+        state = init_state(cfg, opt, jax.random.PRNGKey(args.seed),
+                           compress=args.compress)
+        p_sh = sh.params_shardings(mesh, state.params)
+        state = state._replace(
+            params=jax.device_put(state.params, p_sh),
+            opt=state.opt._replace(
+                mu=jax.device_put(state.opt.mu, p_sh),
+                nu=jax.device_put(state.opt.nu, p_sh)))
+        jitted = jax.jit(step_fn, donate_argnums=0)
+
+        def batch_iter():
+            step = 0
+            while True:
+                toks, labels = lm_batch(cfg, args.batch, args.seq,
+                                        args.seed, step)
+                batch = {"tokens": jnp.asarray(toks),
+                         "labels": jnp.asarray(labels)}
+                if cfg.is_encdec:
+                    batch["enc_embeds"] = jnp.zeros(
+                        (args.batch, args.seq // cfg.frontend_frames_div,
+                         cfg.d_model), jnp.bfloat16)
+                step += 1
+                yield batch
+
+        trainer = Trainer(jitted, state, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every)
+        last = trainer.run(batch_iter(), args.steps,
+                           log_every=args.log_every)
+        print(f"done: final {last}")
+        return last
+
+
+if __name__ == "__main__":
+    main()

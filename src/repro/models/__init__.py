@@ -1,0 +1,2 @@
+"""Model zoo: unified LM (dense/MoE/SSM/hybrid/enc-dec) + quantized MLP."""
+from . import layers, lm, mamba, mlp  # noqa: F401

@@ -1,0 +1,467 @@
+"""Unified LM: dense / GQA / SWA / MoE / SSM / hybrid / encoder-decoder.
+
+One parameter schema + three entry points:
+
+  forward(cfg, params, ...)            -> hidden states (train/prefill)
+  lm_loss(cfg, params, hidden, labels) -> chunked cross-entropy
+  prefill(cfg, params, ...)            -> last-token logits + KV/SSM cache
+  decode_step(cfg, params, cache, ...) -> next-token logits + cache
+
+Layers are stacked on a leading L axis and executed with
+``lax.scan`` + per-layer ``jax.checkpoint`` (remat): HLO stays O(1 layer)
+— the policy that keeps both compile time and activation memory bounded
+at 1000-node scale.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import shardings as sh
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import scan_utils as SU
+
+Array = jax.Array
+PyTree = Any
+
+ATTN_CHUNK_THRESHOLD = 2048   # use chunked (online-softmax) attention above
+ATTN_CHUNK = 1024
+LOSS_CHUNK = 512              # sequence chunk for cross-entropy
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_dec_layer(key, cfg: ArchConfig) -> Dict[str, Array]:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Dict[str, Array] = {"ln1": jnp.ones((d,), jnp.float32)}
+    if cfg.family == "ssm":
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+        return p
+    p["attn"] = L.init_attn(ks[0], cfg)
+    if cfg.family == "hybrid":
+        p["mamba"] = M.init_mamba(ks[1], cfg)
+        p["ln_attn_out"] = jnp.ones((d,), jnp.float32)
+        p["ln_mamba_out"] = jnp.ones((d,), jnp.float32)
+    if cfg.is_encdec:
+        p["ln_cross"] = jnp.ones((d,), jnp.float32)
+        p["cross"] = L.init_attn(ks[2], cfg, cross=True)
+    p["ln2"] = jnp.ones((d,), jnp.float32)
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def _init_enc_layer(key, cfg: ArchConfig) -> Dict[str, Array]:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "attn": L.init_attn(ks[0], cfg),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    k_emb, k_layers, k_enc, k_head = jax.random.split(key, 4)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(k_emb, (vp, d), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _init_dec_layer(k, cfg))(lkeys)
+    if cfg.is_encdec:
+        ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_enc_layer(k, cfg))(ekeys)
+        params["enc_norm"] = jnp.ones((d,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (d, vp), jnp.float32)
+            / math.sqrt(d))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (sequence / training / prefill form)
+# ---------------------------------------------------------------------------
+
+def _attention_mixer(cfg: ArchConfig, p: Dict[str, Array], x: Array,
+                     positions: Array, kv_src: Optional[Array] = None,
+                     causal: bool = True, window: int = 0,
+                     return_kv: bool = False):
+    dt = x.dtype
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = kv_src if kv_src is not None else x
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, dh)
+    k = (src @ p["wk"].astype(dt)).reshape(b, src.shape[1], kv, dh)
+    v = (src @ p["wv"].astype(dt)).reshape(b, src.shape[1], kv, dh)
+    if kv_src is None:  # self-attention: rope both
+        q = L.apply_rope(q, positions, cfg)
+        k = L.apply_rope(k, positions, cfg)
+    q = sh.constrain_heads(q)
+    k = sh.constrain_heads(k)
+    sk = k.shape[1]
+    if max(s, sk) > ATTN_CHUNK_THRESHOLD:
+        out = L.chunked_attention(q, k, v, causal=causal, window=window,
+                                  chunk=ATTN_CHUNK)
+    else:
+        out = L.full_attention(q, k, v, causal=causal, window=window)
+    out = sh.constrain_heads(out)
+    y = out.reshape(b, s, h * dh) @ p["wo"].astype(dt)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _dec_block(cfg: ArchConfig, p: Dict[str, Array], x: Array,
+               positions: Array, enc_out: Optional[Array],
+               collect_kv: bool):
+    """One decoder block. Returns (x, aux) where aux carries KV for
+    prefill-cache construction (zeros-free pytree when not collecting)."""
+    eps = cfg.norm_eps
+    aux = {}
+    hin = L.rms_norm(x, p["ln1"], eps)
+    if cfg.family == "ssm":
+        if collect_kv:
+            y, states = M.mamba_forward(hin, p["mamba"], cfg,
+                                        return_state=True)
+            aux.update(states)
+        else:
+            y = M.mamba_forward(hin, p["mamba"], cfg)
+        x = x + y
+        x = sh.constrain_hidden(x)
+        return x, aux
+    if cfg.family == "hybrid":
+        a_out, kvp = _attention_mixer(cfg, p["attn"], hin, positions,
+                                      causal=True, window=cfg.window,
+                                      return_kv=True)
+        if collect_kv:
+            m_out, states = M.mamba_forward(hin, p["mamba"], cfg,
+                                            return_state=True)
+            aux.update(states)
+        else:
+            m_out = M.mamba_forward(hin, p["mamba"], cfg)
+        mixed = 0.5 * (L.rms_norm(a_out, p["ln_attn_out"], eps)
+                       + L.rms_norm(m_out, p["ln_mamba_out"], eps))
+        x = x + mixed
+        if collect_kv:
+            aux["k"], aux["v"] = kvp
+    else:
+        a_out, kvp = _attention_mixer(cfg, p["attn"], hin, positions,
+                                      causal=True, window=cfg.window,
+                                      return_kv=True)
+        x = x + a_out
+        if collect_kv:
+            aux["k"], aux["v"] = kvp
+    if cfg.is_encdec:
+        hc = L.rms_norm(x, p["ln_cross"], eps)
+        x = x + _attention_mixer(cfg, p["cross"], hc, positions,
+                                 kv_src=enc_out, causal=False)
+    h2 = L.rms_norm(x, p["ln2"], eps)
+    if cfg.family == "moe":
+        x = x + L.moe(h2, p["moe"], cfg)
+    else:
+        x = x + L.mlp(h2, p["mlp"], cfg)
+    x = sh.constrain_hidden(x)
+    return x, aux
+
+
+def _enc_block(cfg: ArchConfig, p: Dict[str, Array], x: Array,
+               positions: Array) -> Array:
+    eps = cfg.norm_eps
+    hin = L.rms_norm(x, p["ln1"], eps)
+    x = x + _attention_mixer(cfg, p["attn"], hin, positions, causal=False)
+    h2 = L.rms_norm(x, p["ln2"], eps)
+    x = x + L.mlp(h2, p["mlp"], cfg)
+    return sh.constrain_hidden(x)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ArchConfig, params: PyTree, enc_embeds: Array) -> Array:
+    """Encoder stack over stubbed frame embeddings (B, F, D)."""
+    x = enc_embeds.astype(L.cdtype(cfg))
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        y = jax.checkpoint(
+            lambda c, q: _enc_block(cfg, q, c, positions))(carry, lp)
+        return y, None
+
+    x, _ = SU.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: PyTree,
+            tokens: Optional[Array] = None,
+            frames: Optional[Array] = None,
+            enc_embeds: Optional[Array] = None,
+            collect_kv: bool = False):
+    """Sequence forward. Returns (hidden, enc_out, kv_stack).
+
+    hidden: (B, S, D) pre-head normalised states.
+    kv_stack: (L, B, S, KV, dh) pair when collect_kv (prefill path).
+    """
+    dt = L.cdtype(cfg)
+    if frames is not None:
+        x = frames.astype(dt)
+    else:
+        x = params["embed"].astype(dt)[tokens]
+    x = sh.constrain_hidden(x)
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_embeds is not None
+        enc_out = encode(cfg, params, enc_embeds)
+
+    def body(carry, lp):
+        y, aux = jax.checkpoint(
+            lambda c, q: _dec_block(cfg, q, c, positions, enc_out,
+                                    collect_kv),
+            static_argnums=())(carry, lp)
+        return y, aux
+
+    x, kv_stack = SU.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, enc_out, kv_stack
+
+
+def logits_head(cfg: ArchConfig, params: PyTree, hidden: Array) -> Array:
+    dt = hidden.dtype
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return hidden @ head.astype(dt)
+
+
+def lm_loss(cfg: ArchConfig, params: PyTree, hidden: Array,
+            labels: Array) -> Array:
+    """Chunked cross-entropy: never materialises (B, S, V) logits.
+
+    Scans sequence chunks; per-chunk logits are (B, LOSS_CHUNK, Vp) and
+    padded-vocab columns are masked out.
+    """
+    b, s, d = hidden.shape
+    vp, v = cfg.padded_vocab, cfg.vocab_size
+    chunk = min(LOSS_CHUNK, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+
+    def body(acc, xs):
+        hk, lk = xs
+        logits = (hk @ head.astype(hk.dtype)).astype(jnp.float32)
+        logits = sh.constrain_logits(logits)
+        if vp > v:
+            neg = jnp.full((vp - v,), -1e30, jnp.float32)
+            logits = logits + jnp.concatenate(
+                [jnp.zeros((v,), jnp.float32), neg])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lk[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = SU.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM caches
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ArchConfig, max_seq: int) -> int:
+    """Ring-buffer length: window-bounded for SWA archs."""
+    if cfg.window > 0:
+        return min(max_seq, cfg.window)
+    return max_seq
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               enc_frames: int = 0) -> PyTree:
+    dt = L.cdtype(cfg)
+    ln = cfg.n_layers
+    cache: Dict[str, Any] = {}
+    w = cache_len(cfg, max_seq)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((ln, batch, w, kv, dh), dt)
+        cache["v"] = jnp.zeros((ln, batch, w, kv, dh), dt)
+        cache["positions"] = jnp.full((batch, w), -1, jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        cache["ssm"] = jnp.zeros((ln, batch, di, n), jnp.float32)
+        cache["conv"] = jnp.zeros((ln, batch, cw - 1, di), dt)
+    if cfg.is_encdec:
+        cache["enc_out"] = jnp.zeros((batch, enc_frames, cfg.d_model), dt)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _dec_block_step(cfg: ArchConfig, p, x: Array, layer_cache, positions,
+                    cache_positions, enc_out):
+    """Single-token decoder block. x: (B, D)."""
+    eps = cfg.norm_eps
+    dt = x.dtype
+    b, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    new_cache = {}
+    hin = L.rms_norm(x, p["ln1"], eps)
+
+    def attn_step(pa, xin, kc, vc):
+        q = (xin @ pa["wq"].astype(dt)).reshape(b, 1, h, dh)
+        k1 = (xin @ pa["wk"].astype(dt)).reshape(b, 1, kv, dh)
+        v1 = (xin @ pa["wv"].astype(dt)).reshape(b, 1, kv, dh)
+        q = L.apply_rope(q, positions[:, None], cfg)
+        k1 = L.apply_rope(k1, positions[:, None], cfg)
+        w = kc.shape[1]
+        slot = positions % w
+        # One-hot blend instead of dynamic scatter: elementwise, so the
+        # update stays LOCAL under a sequence-sharded cache (a scatter
+        # on the sharded W axis makes GSPMD all-gather the whole cache
+        # every layer — 21.5 GB/step on glm4 decode; EXPERIMENTS.md §Perf).
+        hit = jnp.arange(w)[None, :] == slot[:, None]          # (B, W)
+        kc2 = jnp.where(hit[..., None, None], k1, kc)
+        vc2 = jnp.where(hit[..., None, None], v1, vc)
+        cpos = jnp.where(hit, positions[:, None], cache_positions)
+        out = L.decode_attention(q, kc2, vc2, cpos, positions,
+                                 window=cfg.window)
+        y = out.reshape(b, h * dh) @ pa["wo"].astype(dt)
+        return y, kc2, vc2, cpos
+
+    cpos_out = cache_positions
+    if cfg.family == "ssm":
+        y, ms = M.mamba_step(hin, {"ssm": layer_cache["ssm"],
+                                   "conv": layer_cache["conv"]},
+                             p["mamba"], cfg)
+        new_cache.update(ms)
+        return x + y, new_cache, cpos_out
+    if cfg.family == "hybrid":
+        a_out, k2, v2, cpos_out = attn_step(p["attn"], hin,
+                                            layer_cache["k"],
+                                            layer_cache["v"])
+        m_out, ms = M.mamba_step(hin, {"ssm": layer_cache["ssm"],
+                                       "conv": layer_cache["conv"]},
+                                 p["mamba"], cfg)
+        mixed = 0.5 * (L.rms_norm(a_out, p["ln_attn_out"], eps)
+                       + L.rms_norm(m_out, p["ln_mamba_out"], eps))
+        x = x + mixed
+        new_cache.update({"k": k2, "v": v2, **ms})
+    else:
+        a_out, k2, v2, cpos_out = attn_step(p["attn"], hin,
+                                            layer_cache["k"],
+                                            layer_cache["v"])
+        x = x + a_out
+        new_cache.update({"k": k2, "v": v2})
+    if cfg.is_encdec:
+        hc = L.rms_norm(x, p["ln_cross"], eps)
+        y = _attention_mixer(cfg, p["cross"], hc[:, None, :],
+                             positions[:, None], kv_src=enc_out,
+                             causal=False)
+        x = x + y[:, 0]
+    h2 = L.rms_norm(x, p["ln2"], eps)
+    if cfg.family == "moe":
+        x = x + L.moe(h2[:, None, :], p["moe"], cfg)[:, 0]
+    else:
+        x = x + L.mlp(h2, p["mlp"], cfg)
+    return x, new_cache, cpos_out
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree,
+                tokens: Array, positions: Array
+                ) -> Tuple[Array, PyTree]:
+    """One decode step. tokens: (B, 1); positions: (B,). Returns
+    (logits (B, Vp), new_cache)."""
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens[:, 0]]               # (B, D)
+    x = sh.constraint(x, sh.batch_axes(), None)
+    enc_out = cache.get("enc_out")
+    has_attn = cfg.family != "ssm"
+    has_ssm = cfg.family in ("ssm", "hybrid")
+    cpos = cache.get("positions")
+
+    def body(carry, xs):
+        xc, cp = carry
+        lp, lc = xs
+        y, nc, cp2 = _dec_block_step(cfg, lp, xc, lc, positions, cp,
+                                     enc_out)
+        return (y, cp2), nc
+
+    layer_caches = {}
+    if has_attn:
+        layer_caches["k"] = cache["k"]
+        layer_caches["v"] = cache["v"]
+    if has_ssm:
+        layer_caches["ssm"] = cache["ssm"]
+        layer_caches["conv"] = cache["conv"]
+    (x, cpos_new), new_layer_caches = SU.scan(
+        body, (x, cpos if cpos is not None else jnp.zeros((0,), jnp.int32)),
+        (params["layers"], layer_caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(cfg, params, x)
+    new_cache = dict(cache)
+    new_cache.update(new_layer_caches)
+    if cpos is not None:
+        new_cache["positions"] = cpos_new
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params: PyTree,
+            tokens: Optional[Array] = None,
+            frames: Optional[Array] = None,
+            enc_embeds: Optional[Array] = None,
+            max_seq: Optional[int] = None
+            ) -> Tuple[Array, PyTree]:
+    """Run the full prompt; return (last-token logits, decode cache).
+
+    ``max_seq`` sizes the returned cache (>= prompt length + planned new
+    tokens); defaults to the prompt length (the dry-run's decode-at-S
+    semantics)."""
+    hidden, enc_out, cache_stack = forward(
+        cfg, params, tokens=tokens, frames=frames, enc_embeds=enc_embeds,
+        collect_kv=True)
+    b, s, _ = hidden.shape
+    w = cache_len(cfg, max_seq or s)
+    cache: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        k, v = cache_stack["k"], cache_stack["v"]  # (L, B, S, KV, dh)
+        keep = min(s, w)
+        # absolute position p lives in slot p % w (ring when w < s)
+        pos = jnp.arange(s - keep, s)
+        slots = pos % w
+        kr = jnp.zeros(k.shape[:2] + (w,) + k.shape[3:], k.dtype)
+        vr = jnp.zeros_like(kr)
+        kr = kr.at[:, :, slots].set(k[:, :, s - keep:])
+        vr = vr.at[:, :, slots].set(v[:, :, s - keep:])
+        cpos = jnp.full((b, w), -1, jnp.int32
+                        ).at[:, slots].set(pos[None, :])
+        cache["k"], cache["v"], cache["positions"] = kr, vr, cpos
+    if cfg.family in ("ssm", "hybrid"):
+        cache["ssm"] = cache_stack["ssm"]          # (L, B, Di, N)
+        cache["conv"] = cache_stack["conv"]        # (L, B, CW-1, Di)
+    if cfg.is_encdec:
+        cache["enc_out"] = enc_out
+    logits = logits_head(cfg, params, hidden[:, -1])
+    return logits, cache

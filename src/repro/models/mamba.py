@@ -1,0 +1,167 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba-7b family; Hymba SSM heads).
+
+Forward over a sequence uses jax.lax.associative_scan (parallel prefix)
+on the diagonal linear recurrence  h_t = abar_t * h_{t-1} + bbar_t x_t;
+decode is the O(1)-per-token state update, which is what makes the
+long_500k shape feasible for SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+
+def init_mamba(key, cfg: ArchConfig, d_model: int = 0) -> Dict[str, Array]:
+    d = d_model or cfg.d_model
+    di, n, r, cw = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+
+    def ninit(k, shape, scale):
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    # S4D-real initialisation of A
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": ninit(ks[0], (d, 2 * di), 1 / math.sqrt(d)),
+        "conv_w": ninit(ks[1], (cw, di), 1 / math.sqrt(cw)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": ninit(ks[2], (di, r + 2 * n), 1 / math.sqrt(di)),
+        "dt_proj_w": ninit(ks[3], (r, di), 1 / math.sqrt(r)),
+        "dt_proj_b": jnp.log(jnp.expm1(  # softplus^-1 of dt ~ U(1e-3, 1e-1)
+            jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": ninit(ks[4], (di, d), 1 / math.sqrt(di)),
+    }
+
+
+SCAN_CHUNK = 256
+
+
+def _chunked_linear_scan(abar: Array, bx: Array,
+                         chunk: int = SCAN_CHUNK) -> Array:
+    """Cumulative h_t = abar_t * h_{t-1} + bx_t along axis 1.
+
+    A flat associative_scan over S costs ~log2(S) elementwise passes over
+    the (B,S,Di,N) tensors; chunking to ``chunk`` costs log2(chunk)
+    passes + one sequential carry per chunk — e.g. 8 vs 15 passes at
+    S=32k, a ~1.9x cut of the dominant SSM FLOPs (EXPERIMENTS.md §Perf,
+    hymba/falcon compute term).
+    """
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    b, s = abar.shape[0], abar.shape[1]
+    if s <= chunk or s % chunk != 0:
+        _, h = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+        return h
+
+    n = s // chunk
+    ac = abar.reshape((b, n, chunk) + abar.shape[2:]).transpose(
+        1, 0, 2, 3, 4)
+    bc = bx.reshape((b, n, chunk) + bx.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    def per_chunk(carry, xs):
+        a_i, b_i = xs                       # (B, chunk, Di, N)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a_i, b_i), axis=1)
+        h = a_cum * carry[:, None] + b_cum  # inject carry h0
+        return h[:, -1], h
+
+    h0 = jnp.zeros_like(abar[:, 0])
+    _, hc = jax.lax.scan(per_chunk, h0, (ac, bc))
+    return hc.transpose(1, 0, 2, 3, 4).reshape(abar.shape)
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over S. x: (B, S, Di); w: (CW, Di)."""
+    cw = w.shape[0]
+    acc = x * w[cw - 1]
+    for t in range(1, cw):
+        shifted = jnp.pad(x, ((0, 0), (t, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + shifted * w[cw - 1 - t]
+    return acc + b
+
+
+def _ssm_params(p: Dict[str, Array], xz: Array, cfg: ArchConfig):
+    """Common projections. xz: (..., Di) post-conv activations."""
+    n, r = cfg.ssm_state, cfg.dt_rank_
+    dt = xz.dtype
+    proj = xz @ p["x_proj"].astype(dt)                       # (..., r+2n)
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        dt_r @ p["dt_proj_w"].astype(dt)
+        + p["dt_proj_b"].astype(dt))                          # (..., Di)
+    return delta, b_ssm, c_ssm
+
+
+def mamba_forward(x: Array, p: Dict[str, Array], cfg: ArchConfig,
+                  return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, final (ssm, conv) states]."""
+    dt = x.dtype
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(dt)                          # (B, S, 2Di)
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = _causal_conv(xs_raw, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    xs = jax.nn.silu(xs)
+
+    delta, b_ssm, c_ssm = _ssm_params(p, xs, cfg)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (Di, N)
+    abar = jnp.exp(delta.astype(jnp.float32)[..., None] * a)  # (B,S,Di,N)
+    bx = (delta[..., None] * b_ssm[..., None, :]
+          * xs[..., None]).astype(jnp.float32)                # (B,S,Di,N)
+    h = _chunked_linear_scan(abar, bx)
+    y = jnp.einsum("bsdn,bsn->bsd", h.astype(dt), c_ssm)
+    y = y + xs * p["D"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    if return_state:
+        cw = cfg.ssm_conv
+        conv_tail = xs_raw[:, -(cw - 1):]           # (B, CW-1, Di)
+        return out, {"ssm": h[:, -1], "conv": conv_tail}
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Dict[str, Array]:
+    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, di), dtype),
+    }
+
+
+def mamba_step(x: Array, cache: Dict[str, Array], p: Dict[str, Array],
+               cfg: ArchConfig) -> Tuple[Array, Dict[str, Array]]:
+    """Single-token decode. x: (B, D) -> (B, D), updated cache."""
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    xs, z = jnp.split(xz, 2, axis=-1)                          # (B, Di)
+    # conv ring: history (B, CW-1, Di)
+    hist = cache["conv"]
+    w = p["conv_w"].astype(dt)                                 # (CW, Di)
+    acc = xs * w[-1]
+    cw = w.shape[0]
+    for t in range(1, cw):
+        acc = acc + hist[:, cw - 1 - t] * w[cw - 1 - t]
+    xs_c = jax.nn.silu(acc + p["conv_b"].astype(dt))
+    new_hist = jnp.concatenate([hist[:, 1:], xs[:, None]], axis=1)
+
+    delta, b_ssm, c_ssm = _ssm_params(p, xs_c, cfg)            # (B, Di), (B,N)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    abar = jnp.exp(delta.astype(jnp.float32)[..., None] * a)   # (B, Di, N)
+    bx = (delta[..., None] * b_ssm[:, None, :] * xs_c[..., None]
+          ).astype(jnp.float32)
+    h = abar * cache["ssm"] + bx                                # (B, Di, N)
+    y = jnp.einsum("bdn,bn->bd", h.astype(dt), c_ssm)
+    y = y + xs_c * p["D"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    return out, {"ssm": h, "conv": new_hist}

@@ -1,0 +1,181 @@
+"""Quantized, fanin-prunable MLP — the paper's evaluation model family.
+
+JSC-S/M/L (LogicNets architectures) are instances of this model:
+linear -> batch-norm -> quantized activation per layer, trained with QAT
+(per-layer activation selection) + FCP, then compiled to fixed-function
+logic via ``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+from repro.core.fcp import GradualFCP, topk_row_mask
+from repro.core.quant import ActQuantSpec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    name: str
+    n_inputs: int
+    features: Tuple[int, ...]        # hidden + output widths
+    fanins: Tuple[int, ...]          # per-layer fanin budget (post-FCP)
+    act_bits: Tuple[int, ...]        # per-layer *output* activation bits
+    in_bits: int = 1                 # input quantization bits
+    n_classes: int = 5
+    alpha: float = 2.0               # quantizer range
+    bn: bool = True
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.features)
+
+    def in_spec(self) -> ActQuantSpec:
+        # JSC features are standardised (both signs) -> signed branch
+        return Q.select_activation(False, self.in_bits)
+
+    def layer_specs(self) -> List[ActQuantSpec]:
+        """Per-layer output activation specs (paper's selection rule).
+
+        Hidden layers follow BN, whose outputs take both signs -> signed;
+        the final scoring layer uses a wider signed code so argmax has
+        resolution.
+        """
+        return [Q.select_activation(False, b) for b in self.act_bits]
+
+
+def init_mlp_params(cfg: MLPConfig, key: jax.Array) -> Dict:
+    layers = []
+    d_in = cfg.n_inputs
+    keys = jax.random.split(key, cfg.n_layers)
+    for i, d_out in enumerate(cfg.features):
+        k1, k2 = jax.random.split(keys[i])
+        lp = {
+            "w": jax.random.normal(k1, (d_out, d_in), jnp.float32)
+            * (1.0 / math.sqrt(d_in)),
+            "b": jnp.zeros((d_out,), jnp.float32),
+            # learnable quantizer range (PACT-style, also for the signed
+            # branch): trained jointly, folded into the truth tables.
+            "alpha": jnp.asarray(cfg.alpha, jnp.float32),
+        }
+        if cfg.bn:
+            lp.update({
+                "bn_gamma": jnp.ones((d_out,), jnp.float32),
+                "bn_beta": jnp.zeros((d_out,), jnp.float32),
+            })
+        layers.append(lp)
+        d_in = d_out
+    return {"layers": layers}
+
+
+def init_bn_state(cfg: MLPConfig) -> Dict:
+    return {
+        "mean": [jnp.zeros((f,), jnp.float32) for f in cfg.features],
+        "var": [jnp.ones((f,), jnp.float32) for f in cfg.features],
+    }
+
+
+def init_masks(cfg: MLPConfig) -> List[Array]:
+    masks = []
+    d_in = cfg.n_inputs
+    for d_out in cfg.features:
+        masks.append(jnp.ones((d_out, d_in), bool))
+        d_in = d_out
+    return masks
+
+
+def mlp_forward(cfg: MLPConfig, params: Dict, masks: Sequence[Array],
+                bn_state: Dict, x: Array, train: bool = False,
+                momentum: float = 0.1):
+    """Quantized forward. Returns (scores, new_bn_state).
+
+    scores: decoded real values of the last layer (pre-argmax)."""
+    specs = cfg.layer_specs()
+    in_spec = cfg.in_spec()
+    h = Q.apply_act_quant(in_spec, x, jnp.asarray(cfg.alpha, jnp.float32))
+    new_mean, new_var = [], []
+    for i, lp in enumerate(params["layers"]):
+        w = jnp.where(masks[i], lp["w"], 0.0)
+        y = h @ w.T + lp["b"]
+        if cfg.bn:
+            if train:
+                mu = jnp.mean(y, axis=0)
+                var = jnp.var(y, axis=0)
+                new_mean.append((1 - momentum) * bn_state["mean"][i]
+                                + momentum * mu)
+                new_var.append((1 - momentum) * bn_state["var"][i]
+                               + momentum * var)
+            else:
+                mu, var = bn_state["mean"][i], bn_state["var"][i]
+                new_mean.append(mu)
+                new_var.append(var)
+            y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+            y = y * lp["bn_gamma"] + lp["bn_beta"]
+        a_i = layer_alpha(cfg, lp)
+        h = Q.apply_act_quant(specs[i], y, a_i)
+    return h, {"mean": new_mean, "var": new_var}
+
+
+def layer_alpha(cfg: MLPConfig, lp: Dict) -> Array:
+    """Learnable positive quantizer range (fixed cfg.alpha fallback)."""
+    if "alpha" in lp:
+        return jnp.abs(lp["alpha"]) + 1e-3
+    return jnp.asarray(cfg.alpha, jnp.float32)
+
+
+def mlp_loss(cfg: MLPConfig, params, masks, bn_state, x, labels,
+             train: bool = True):
+    scores, new_bn = mlp_forward(cfg, params, masks, bn_state, x, train)
+    logits = scores[:, : cfg.n_classes]
+    logp = jax.nn.log_softmax(logits / 0.25, axis=-1)  # temp sharpens quantized scores
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+    return loss, new_bn
+
+
+def update_masks_gradual(cfg: MLPConfig, params, step: int,
+                         schedule: GradualFCP) -> List[Array]:
+    """Recompute FCP masks along the gradual schedule (host-side)."""
+    masks = []
+    for i, lp in enumerate(params["layers"]):
+        fanin_target = cfg.fanins[i]
+        sched = dataclasses.replace(schedule, target_fanin=fanin_target)
+        masks.append(sched.update_mask(lp["w"], step))
+    return masks
+
+
+def final_masks(cfg: MLPConfig, params) -> List[Array]:
+    return [topk_row_mask(lp["w"], cfg.fanins[i])
+            for i, lp in enumerate(params["layers"])]
+
+
+def to_logic(cfg: MLPConfig, params, masks, bn_state):
+    """Compile the trained MLP to a LogicNetwork (core flow end-to-end)."""
+    from repro.core.logic_infer import compile_mlp_to_logic
+
+    layers = []
+    for i, lp in enumerate(params["layers"]):
+        d = {"w": lp["w"], "b": lp["b"]}
+        if cfg.bn:
+            d.update({
+                "bn_gamma": lp["bn_gamma"], "bn_beta": lp["bn_beta"],
+                "bn_mean": bn_state["mean"][i], "bn_var": bn_state["var"][i],
+            })
+        layers.append(d)
+    return compile_mlp_to_logic(
+        {"layers": layers},
+        specs=cfg.layer_specs(),
+        alphas=[float(layer_alpha(cfg, lp))
+                for lp in params["layers"]],
+        masks=[np.asarray(m) for m in masks],
+        fanins=list(cfg.fanins),
+        in_spec=cfg.in_spec(),
+        in_alpha=cfg.alpha,
+    )

@@ -1,0 +1,47 @@
+"""Scan-vs-unroll switch shared by all sequence/layer loops.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE
+irrespective of trip count. The dry-run therefore measures per-iteration
+costs on small UNROLLED configs and re-multiplies by trip counts
+(launch/dryrun.py). Production path always uses lax.scan (bounded HLO,
+bounded memory); ``unrolled()`` flips every loop in the model to a
+Python loop for cost measurement only.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled():
+    global UNROLL
+    prev = UNROLL
+    UNROLL = True
+    try:
+        yield
+    finally:
+        UNROLL = prev
+
+
+def scan(body, carry, xs, length=None):
+    """lax.scan, or a Python loop under ``unrolled()``."""
+    if not UNROLL:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = (jax.tree_util.tree_leaves(xs)[0].shape[0]
+         if xs is not None else length)
+    ys = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], xs) \
+            if xs is not None else None
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and jax.tree_util.tree_leaves(ys[0]):
+        stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked

@@ -1,0 +1,1 @@
+"""Serving substrate: batched request engine for logic networks + LMs."""

@@ -1,0 +1,180 @@
+"""Batched serving engine.
+
+Two request kinds, matching the paper's deployment story:
+  * LogicEngine — ultra-low-latency classification through the compiled
+    fixed-function logic network (the paper's product); requests are
+    micro-batched with a latency deadline, executed via the Pallas
+    lut_layer path (oracle path selectable);
+  * LMEngine    — autoregressive decode with a shared KV cache pool:
+    continuous batching over slots (admit on free slot, retire on EOS /
+    max tokens). On-pod deployment shards slots over ("pod","data") and
+    heads over "model" exactly like the dry-run's decode cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.logic_infer import LogicNetwork
+from repro.models import lm
+
+
+# ---------------------------------------------------------------------------
+# Logic-network serving (the paper's inference product)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LogicEngine:
+    """Micro-batching frontend over a compiled LogicNetwork."""
+
+    net: LogicNetwork
+    n_classes: int
+    max_batch: int = 256
+    max_wait_ms: float = 0.2
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        self._fn = jax.jit(
+            lambda x: jnp.argmax(
+                self.net(x, use_pallas=self.use_pallas)
+                [..., : self.n_classes], axis=-1))
+        # warm the jit cache at the serving batch size
+        self._fn(jnp.zeros((self.max_batch, self.net.n_inputs), jnp.float32))
+
+    def classify(self, x: np.ndarray) -> np.ndarray:
+        """Synchronous batched classification."""
+        n = x.shape[0]
+        out = np.empty((n,), np.int32)
+        for i in range(0, n, self.max_batch):
+            xb = x[i: i + self.max_batch]
+            pad = self.max_batch - xb.shape[0]
+            if pad:
+                xb = np.concatenate([xb, np.zeros((pad, x.shape[1]),
+                                                  x.dtype)])
+            res = np.asarray(self._fn(jnp.asarray(xb)))
+            out[i: i + self.max_batch - pad] = res[: self.max_batch - pad]
+        return out
+
+    def serve_queue(self, requests: List[np.ndarray]
+                    ) -> Tuple[List[np.ndarray], Dict[str, float]]:
+        """Micro-batched serving of a request list; returns per-request
+        results + latency stats (p50/p95/mean, µs)."""
+        lat = []
+        results = []
+        for r in requests:
+            t0 = time.perf_counter()
+            results.append(self.classify(r))
+            lat.append((time.perf_counter() - t0) * 1e6)
+        lat_np = np.asarray(lat)
+        stats = {"p50_us": float(np.percentile(lat_np, 50)),
+                 "p95_us": float(np.percentile(lat_np, 95)),
+                 "mean_us": float(lat_np.mean())}
+        return results, stats
+
+
+# ---------------------------------------------------------------------------
+# LM serving (continuous batching decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LMRequest:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1            # -1 = never
+    out_tokens: Optional[List[int]] = None
+
+
+class LMEngine:
+    """Continuous-batching decode over a fixed slot pool.
+
+    Slots admit requests as they free up; one jitted decode_step advances
+    every active slot each tick (inactive slots carry a pad token, their
+    outputs are discarded) — the standard TPU serving shape where the
+    decode batch is static and occupancy varies.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
+                 max_seq: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = lm.init_cache(cfg, n_slots, max_seq)
+        self.positions = np.zeros((n_slots,), np.int32)
+        self.active: List[Optional[LMRequest]] = [None] * n_slots
+        self.last_tok = np.zeros((n_slots, 1), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
+        self._prefill_cache = {}
+
+    def _admit(self, req: LMRequest, slot: int):
+        # per-request prefill at its prompt length (compile cache per len)
+        s = len(req.prompt)
+        toks = jnp.asarray(req.prompt[None, :])
+        if s not in self._prefill_cache:
+            self._prefill_cache[s] = jax.jit(
+                lambda p, t: lm.prefill(self.cfg, p, tokens=t,
+                                        max_seq=self.max_seq))
+        logits, cache1 = self._prefill_cache[s](self.params, toks)
+
+        # splice slot state into the pooled cache (key-aware; ring slot
+        # layouts agree because prompt_len <= pool window here)
+        new_cache = dict(self.cache)
+        for key, single in cache1.items():
+            pool = self.cache[key]
+            if key in ("k", "v"):            # (L, B, W, KV, dh)
+                w = min(single.shape[2], pool.shape[2])
+                reset = pool.at[:, slot].set(0)
+                new_cache[key] = reset.at[:, slot, :w].set(single[:, 0, :w])
+            elif key == "positions":          # (B, W)
+                w = min(single.shape[1], pool.shape[1])
+                reset = pool.at[slot].set(-1)
+                new_cache[key] = reset.at[slot, :w].set(single[0, :w])
+            elif key in ("ssm", "conv"):      # (L, B, ...)
+                new_cache[key] = pool.at[:, slot].set(single[:, 0])
+            elif key == "enc_out":            # (B, F, D)
+                new_cache[key] = pool.at[slot].set(single[0])
+            else:
+                raise KeyError(f"unknown cache leaf {key}")
+        self.cache = new_cache
+        req.out_tokens = []
+        self.active[slot] = req
+        self.positions[slot] = s
+        self.last_tok[slot, 0] = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(int(self.last_tok[slot, 0]))
+
+    def run(self, requests: List[LMRequest]) -> List[LMRequest]:
+        pending = list(requests)
+        done: List[LMRequest] = []
+        while pending or any(a is not None for a in self.active):
+            # admit
+            for i in range(self.n_slots):
+                if self.active[i] is None and pending:
+                    self._admit(pending.pop(0), i)
+            # decode tick
+            logits, self.cache = self._decode(
+                self.params, self.cache,
+                jnp.asarray(self.last_tok), jnp.asarray(self.positions))
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for i in range(self.n_slots):
+                req = self.active[i]
+                if req is None:
+                    continue
+                tok = int(nxt[i])
+                req.out_tokens.append(tok)
+                self.positions[i] += 1
+                self.last_tok[i, 0] = tok
+                if (tok == req.eos_id
+                        or len(req.out_tokens) >= req.max_new_tokens
+                        or self.positions[i] >= self.max_seq - 1):
+                    done.append(req)
+                    self.active[i] = None
+        return done

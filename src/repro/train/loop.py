@@ -1,0 +1,168 @@
+"""Training loop: jitted step factory + fault-tolerant Trainer.
+
+The step factory builds a pjit-able ``train_step(state, batch)`` for any
+ArchConfig; the Trainer owns checkpoint/restore, the straggler watchdog,
+emergency checkpoints and (optional) gradient compression on the
+data-parallel reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import compress as C
+from repro.dist.fault import StepWatchdog, retry_step
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train.optim import AdamW, AdamWState, global_norm
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+    ef: Optional[C.EFState]  # gradient-compression error feedback
+
+
+def make_train_step(cfg: ArchConfig, optimizer: AdamW,
+                    compress: str = "none", compress_frac: float = 0.01,
+                    grad_accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_accum`` > 1 splits the batch's leading axis into microbatches
+    scanned sequentially (constant memory in the number of microbatches)
+    — the standard way to push global batch beyond per-step activation
+    memory at pod scale.
+    """
+
+    def loss_fn(params, batch):
+        kw = {}
+        if "enc_embeds" in batch:
+            kw["enc_embeds"] = batch["enc_embeds"]
+        if "frames" in batch:
+            hidden, _, _ = lm.forward(cfg, params, frames=batch["frames"],
+                                      **kw)
+        else:
+            hidden, _, _ = lm.forward(cfg, params, tokens=batch["tokens"],
+                                      **kw)
+        return lm.lm_loss(cfg, params, hidden, batch["labels"])
+
+    def grads_of(params, batch):
+        if grad_accum <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc_loss, acc_g = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (acc_loss + loss,
+                    jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / grad_accum
+        return loss_sum * inv, jax.tree_util.tree_map(
+            lambda g: g * inv, g_sum)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, grads = grads_of(state.params, batch)
+        ef = state.ef
+        if compress == "topk":
+            grads, ef = C.topk_compress(grads, ef, compress_frac)
+        elif compress == "sign":
+            grads, ef = C.sign_compress(grads, ef)
+        gnorm = global_norm(grads)
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt.step}
+        return TrainState(params, opt, ef), metrics
+
+    return train_step
+
+
+def init_state(cfg: ArchConfig, optimizer: AdamW, key,
+               compress: str = "none") -> TrainState:
+    params = lm.init_params(cfg, key)
+    opt = optimizer.init(params)
+    ef = C.init_ef(params) if compress != "none" else None
+    return TrainState(params, opt, ef)
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Fault-tolerant orchestration around a jitted step.
+
+    * resumes from the latest committed checkpoint on construction;
+    * async-checkpoints every ``ckpt_every`` steps;
+    * emergency (synchronous) checkpoint on any exception escape;
+    * StepWatchdog flags stragglers; flagged steps are logged and, past
+      ``max_straggler_events``, trigger a checkpoint so a scheduler could
+      migrate the job (the 1000-node playbook).
+    """
+
+    train_step: Any
+    state: TrainState
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    max_straggler_events: int = 10
+
+    def __post_init__(self):
+        self.watchdog = StepWatchdog()
+        self.step = 0
+        self._ckpt = (ckpt.AsyncCheckpointer(self.ckpt_dir, self.keep)
+                      if self.ckpt_dir else None)
+        if self.ckpt_dir:
+            restored = ckpt.restore_latest(self.ckpt_dir, self.state)
+            if restored is not None:
+                self.state = jax.tree_util.tree_map(jnp.asarray, restored)
+                self.step = int(self.state.opt.step)
+
+    def run(self, batch_iter, n_steps: int, log_every: int = 10,
+            log_fn=print) -> Dict[str, float]:
+        last = {}
+        safe_step = retry_step(self.train_step, max_retries=2)
+        try:
+            for _ in range(n_steps):
+                batch = next(batch_iter)
+                t0 = time.perf_counter()
+                self.state, metrics = safe_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.step += 1
+                straggler = self.watchdog.record(dt)
+                if straggler and (self.watchdog.straggler_events
+                                  >= self.max_straggler_events):
+                    self._save()
+                if self.step % log_every == 0:
+                    last = {k: float(v) for k, v in metrics.items()}
+                    log_fn(f"step {self.step}: loss={last['loss']:.4f} "
+                           f"gnorm={last['grad_norm']:.3f} {dt*1e3:.0f}ms")
+                if self._ckpt and self.step % self.ckpt_every == 0:
+                    self._save()
+        except BaseException:
+            if self._ckpt:  # emergency checkpoint, then re-raise
+                self._ckpt.wait()
+                ckpt.save(self.ckpt_dir, self.step, self.state,
+                          extra={"emergency": True})
+            raise
+        if self._ckpt:
+            self._save()
+            self._ckpt.wait()
+        return last
+
+    def _save(self):
+        if self._ckpt:
+            self._ckpt.save(self.step, self.state,
+                            extra={"mean_step_s": self.watchdog.mean_step})

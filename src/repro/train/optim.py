@@ -1,0 +1,128 @@
+"""Optimizers from scratch (no optax offline): AdamW, SGD-momentum.
+
+State pytrees mirror the param pytree, so under pjit the moments inherit
+the 2-D fsdp+tensor param sharding — ZeRO-sharded optimizer state by
+construction (see dist/shardings.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+    master: Optional[PyTree] = None  # f32 master copy (mixed precision)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """AdamW; with ``mixed_precision`` the live params are bf16 (all
+    fwd/bwd collectives move 2-byte data) and the f32 master copy lives
+    in the (ZeRO-sharded) optimizer state."""
+
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    mixed_precision: bool = False
+
+    def init(self, params: PyTree) -> AdamWState:
+        def z(p):
+            return jnp.zeros(p.shape, jnp.float32)
+        master = None
+        if self.mixed_precision:
+            master = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(z, params),
+                          jax.tree_util.tree_map(z, params),
+                          master)
+
+    def cast_params(self, params: PyTree) -> PyTree:
+        if not self.mixed_precision:
+            return params
+        return jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16), params)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> Tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * (g * g), state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return p.astype(jnp.float32) - lr * u
+
+        src = state.master if state.master is not None else params
+        new_master = jax.tree_util.tree_map(upd, src, mu, nu)
+        if state.master is not None:
+            new_params = self.cast_params(new_master)
+            return new_params, AdamWState(step, mu, nu, new_master)
+        return new_master, AdamWState(step, mu, nu, None)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-2
+    momentum: float = 0.9
+    grad_clip: float = 0.0
+
+    def init(self, params: PyTree) -> SGDState:
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        mom = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g, state.momentum, grads)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - lr * m, params, mom)
+        return new_params, SGDState(step, mom)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    sq = jax.tree_util.tree_reduce(
+        lambda acc, x: acc + jnp.sum(jnp.square(x.astype(jnp.float32))),
+        tree, jnp.zeros((), jnp.float32))
+    return jnp.sqrt(sq)

@@ -1,0 +1,88 @@
+"""Attention correctness: chunked == full, windows, decode-vs-prefill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(rng, b, sq, sk, h, kv, dh):
+    q = jnp.asarray(rng.normal(size=(b, sq, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, kv, dh)), jnp.float32)
+    return q, k, v
+
+
+@settings(max_examples=12, deadline=None)
+@given(sq=st.integers(1, 65), chunk=st.sampled_from([4, 16, 32]),
+       window=st.sampled_from([0, 8, 24]), h=st.sampled_from([2, 4]),
+       kv=st.sampled_from([1, 2]), seed=st.integers(0, 50))
+def test_chunked_equals_full(sq, chunk, window, h, kv, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, 2, sq, sq, h, kv, 8)
+    full = L.full_attention(q, k, v, causal=True, window=window)
+    chk = L.chunked_attention(q, k, v, causal=True, window=window,
+                              chunk=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chk),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_window_masks_strictly():
+    """With window w, position p attends only to (p-w, p]."""
+    rng = np.random.default_rng(0)
+    s, w = 32, 8
+    q, k, v = _qkv(rng, 1, s, s, 2, 2, 4)
+    out = L.full_attention(q, k, v, causal=True, window=w)
+    # zeroing everything outside the window of the last query must not
+    # change the last query's output
+    k2 = k.at[:, : s - w].set(1e6)
+    v2 = v.at[:, : s - w].set(1e6)
+    out2 = L.full_attention(q, k2, v2, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out[:, -1]),
+                               np.asarray(out2[:, -1]), rtol=1e-4)
+
+
+def test_decode_attention_matches_full():
+    """Decode path against a filled cache == last row of full attention."""
+    rng = np.random.default_rng(1)
+    b, s, h, kv, dh = 2, 16, 4, 2, 8
+    q, k, v = _qkv(rng, b, s, s, h, kv, dh)
+    full = L.full_attention(q, k, v, causal=True)
+    cpos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    dec = L.decode_attention(q[:, -1:], k, v, cpos, pos)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_ring_window():
+    """Ring cache with window: empty (-1) and out-of-window slots ignored."""
+    rng = np.random.default_rng(2)
+    b, w, h, kv, dh = 1, 8, 2, 2, 4
+    q = jnp.asarray(rng.normal(size=(b, 1, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, w, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, w, kv, dh)), jnp.float32)
+    # slots hold positions 10..17 in ring order (pos % 8)
+    cpos = jnp.asarray([[16, 17, 10, 11, 12, 13, 14, 15]])
+    pos = jnp.asarray([17])
+    out = L.decode_attention(q, k, v, cpos, pos, window=4)
+    # only positions 14..17 are in-window; poisoning the others is a no-op
+    poison_slots = jnp.asarray([2, 3, 4])  # positions 10, 11, 12
+    k2 = k.at[:, poison_slots].set(1e6)
+    v2 = v.at[:, poison_slots].set(1e6)
+    out2 = L.decode_attention(q, k2, v2, cpos, pos, window=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-4)
+
+
+def test_gqa_repeat_equivalence():
+    """GQA == MHA with explicitly repeated KV heads."""
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng, 2, 8, 8, 4, 2, 8)
+    out_gqa = L.full_attention(q, k, v, causal=True)
+    k_rep = L._repeat_kv(k, 2)
+    v_rep = L._repeat_kv(v, 2)
+    out_mha = L.full_attention(q, k_rep, v_rep, causal=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               rtol=1e-5)

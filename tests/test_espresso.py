@@ -1,0 +1,54 @@
+"""espresso-lite: correctness + quality properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import espresso as esp
+
+
+@settings(max_examples=60, deadline=None)
+@given(k=st.integers(1, 10), density=st.floats(0.05, 0.95),
+       seed=st.integers(0, 10_000))
+def test_minimize_correct(k, density, seed):
+    """Property: the cover realises exactly the on-set."""
+    rng = np.random.default_rng(seed)
+    onset = rng.random(1 << k) < density
+    cov = esp.minimize(onset)
+    assert esp.verify(cov, onset)
+    assert cov.n_cubes <= int(onset.sum())  # never worse than minterms
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_minimize_with_dc(k, seed):
+    rng = np.random.default_rng(seed)
+    onset = rng.random(1 << k) < 0.3
+    dc = (rng.random(1 << k) < 0.2) & ~onset
+    cov = esp.minimize(onset, dc)
+    assert esp.verify(cov, onset, dc)
+
+
+def test_constants():
+    assert esp.minimize(np.zeros(8, bool)).n_cubes == 0
+    cov = esp.minimize(np.ones(8, bool))
+    assert cov.n_cubes == 1 and cov.n_literals == 0
+
+
+def test_known_minimization():
+    # f = x0 XOR-free case: f(x) = x0 (onset where bit0 set), 3 vars
+    onset = np.array([(i >> 0) & 1 == 1 for i in range(8)])
+    cov = esp.minimize(onset)
+    assert cov.n_cubes == 1
+    assert cov.n_literals == 1
+
+
+def test_and_or_absorption():
+    # f = x0 & x1 | x0 -> minimises to just x0
+    onset = np.array([bool(i & 1) for i in range(4)])
+    cov = esp.minimize(onset)
+    assert cov.n_cubes == 1 and cov.n_literals == 1
+
+
+def test_sop_string():
+    onset = np.array([False, True, False, True])  # f = x0 (2 vars)
+    s = esp.cover_to_sop_str(esp.minimize(onset))
+    assert s == "(x0)"

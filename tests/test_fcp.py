@@ -1,0 +1,75 @@
+"""Fanin-constrained pruning: masks, schedules, ADMM."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fcp
+
+
+@settings(max_examples=25, deadline=None)
+@given(out_dim=st.integers(1, 12), in_dim=st.integers(1, 24),
+       fanin=st.integers(1, 8))
+def test_topk_mask_row_budget(out_dim, in_dim, fanin):
+    rng = np.random.default_rng(out_dim * 100 + in_dim)
+    w = jnp.asarray(rng.normal(size=(out_dim, in_dim)), jnp.float32)
+    mask = fcp.topk_row_mask(w, fanin)
+    rows = np.asarray(fcp.row_fanins(mask))
+    assert np.all(rows == min(fanin, in_dim))
+
+
+def test_projection_keeps_largest(rng):
+    w = jnp.asarray([[3.0, -1.0, 0.5, 2.0]])
+    p = fcp.project_fanin(w, 2)
+    np.testing.assert_allclose(np.asarray(p), [[3.0, 0, 0, 2.0]])
+
+
+def test_projection_idempotent(rng):
+    w = jnp.asarray(rng.normal(size=(6, 10)), jnp.float32)
+    p1 = fcp.project_fanin(w, 3)
+    p2 = fcp.project_fanin(p1, 3)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2))
+
+
+def test_gradual_schedule_monotone():
+    sched = fcp.GradualFCP(target_fanin=4, begin_step=0, end_step=100)
+    f = [int(sched.fanin_at(t, 64)) for t in range(0, 120, 10)]
+    assert f[0] == 64
+    assert f[-1] == 4
+    assert all(a >= b for a, b in zip(f, f[1:]))
+
+
+def test_admm_drives_to_fanin(rng):
+    """ADMM on a least-squares toy: W converges near the fanin-K set."""
+    import jax
+    t = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    t = fcp.project_fanin(t, 3)  # ground truth is fanin-3
+    x = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    y = x @ t.T
+    admm = fcp.AdmmFCP(target_fanin=3, rho=0.05, dual_freq=10)
+    w = jnp.asarray(rng.normal(size=(8, 16)) * 0.1, jnp.float32)
+    z, u = admm.init_state(w)
+
+    def loss(w, z, u):
+        return jnp.mean((x @ w.T - y) ** 2) + admm.penalty(w, z, u)
+
+    g = jax.jit(jax.grad(loss))
+    for i in range(300):
+        w = w - 0.05 * g(w, z, u)
+        if i % 10 == 9:
+            z, u = admm.dual_update(w, z, u)
+    w_f, mask = admm.finalize(w)
+    # off-support mass should be tiny vs on-support mass
+    off = float(jnp.sum(jnp.abs(w * (1 - mask))))
+    on = float(jnp.sum(jnp.abs(w * mask)))
+    assert off / on < 0.15
+    rows = np.asarray(fcp.row_fanins(mask))
+    assert np.all(rows <= 3)
+
+
+def test_fanin_indices_padding():
+    mask = jnp.asarray([[1, 0, 1, 0], [0, 0, 0, 1]], bool)
+    idx, valid = fcp.fanin_indices(mask, 3)
+    assert idx.shape == (2, 3)
+    assert np.asarray(valid).sum(1).tolist() == [2, 1]
+    # padded entries repeat a valid index (weight 0 keeps semantics)
+    assert int(idx[1, 1]) == 3

@@ -1,0 +1,64 @@
+"""End-to-end paper flow on a reduced JSC config: QAT+FCP train ->
+logic compile -> bit-exact serving -> hardware report."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.jsc import JSC_DEMO
+from repro.data.jsc import train_test
+from repro.models.mlp import final_masks, mlp_forward, to_logic
+from repro.serving.engine import LogicEngine
+from repro.train.jsc_trainer import train_jsc
+
+CFG = JSC_DEMO
+DATA = train_test(4000, 1000, seed=0)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return train_jsc(CFG, steps=400, batch=128, data=DATA)
+
+
+def test_training_reaches_signal(trained):
+    assert trained.test_acc > 0.5  # far above 20% chance
+
+
+def test_fanin_budget_respected(trained):
+    for i, m in enumerate(trained.masks):
+        rows = np.asarray(m).sum(1)
+        assert rows.max() <= CFG.fanins[i]
+
+
+def test_logic_equals_qat_network(trained):
+    """Compiled logic network is bit-exact vs the quantized MLP."""
+    net = to_logic(CFG, trained.params, trained.masks, trained.bn_state)
+    (xte, yte) = DATA[1]
+    x = jnp.asarray(xte[:512])
+    scores_mlp, _ = mlp_forward(CFG, trained.params, trained.masks,
+                                trained.bn_state, x, train=False)
+    pred_mlp = np.asarray(jnp.argmax(scores_mlp[:, :5], -1))
+    out = net(x)
+    pred_logic = np.asarray(jnp.argmax(out[:, :5], -1))
+    np.testing.assert_array_equal(pred_mlp, pred_logic)
+
+
+def test_logic_engine_serving(trained):
+    net = to_logic(CFG, trained.params, trained.masks, trained.bn_state)
+    eng = LogicEngine(net, 5, max_batch=128)
+    (xte, yte) = DATA[1]
+    pred = eng.classify(xte[:300])
+    acc = float((pred == yte[:300]).mean())
+    assert abs(acc - trained.test_acc) < 0.1
+
+
+def test_hardware_report_structure(trained):
+    from repro.core.logic_infer import hardware_report
+    net = to_logic(CFG, trained.params, trained.masks, trained.bn_state)
+    rep, per_layer = hardware_report(net)
+    assert rep.luts > 0 and rep.depth >= 1 and rep.ffs > 0
+    assert rep.fmax_mhz > 100
+    assert len(per_layer) == CFG.n_layers
+    base, _ = hardware_report(net, minimize_logic=False)
+    assert rep.luts <= base.luts

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fanin_matmul import (dense_equivalent, fanin_matmul,
+                                        fanin_matmul_ref)
+from repro.kernels.lut_layer import lut_layer, lut_layer_ref
+from repro.kernels.xnor_popcount import (pack_bipolar, xnor_matmul,
+                                         xnor_matmul_ref)
+
+
+@pytest.mark.parametrize("B,n_in,N,K,L", [
+    (8, 16, 32, 3, 2),
+    (130, 20, 50, 4, 2),     # non-multiple of blocks
+    (64, 64, 128, 6, 2),     # exact block
+    (33, 10, 7, 2, 4),       # multi-level codes
+    (16, 24, 200, 5, 3),
+])
+def test_lut_layer_sweep(B, n_in, N, K, L):
+    rng = np.random.default_rng(B * 7 + N)
+    codes = jnp.asarray(rng.integers(0, L, (B, n_in)), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, n_in, (N, K)), jnp.int32)
+    tables = jnp.asarray(rng.integers(0, 8, (N, L ** K)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(lut_layer(codes, idx, tables, L)),
+        np.asarray(lut_layer_ref(codes, idx, tables, L)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 40), n_in=st.integers(4, 40), N=st.integers(1, 40),
+       K=st.integers(1, 6), seed=st.integers(0, 99))
+def test_lut_layer_property(B, n_in, N, K, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2, (B, n_in)), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, n_in, (N, K)), jnp.int32)
+    tables = jnp.asarray(rng.integers(0, 2, (N, 2 ** K)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(lut_layer(codes, idx, tables, 2)),
+        np.asarray(lut_layer_ref(codes, idx, tables, 2)))
+
+
+@pytest.mark.parametrize("B,n,N", [
+    (8, 32, 16),
+    (17, 100, 33),      # ragged everything
+    (128, 4096, 128),   # full blocks, 1 full packed-word tile
+    (1, 7, 1),          # tiny
+    (40, 129, 250),
+])
+def test_xnor_sweep(B, n, N):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.choice([-1.0, 1.0], (B, n)), jnp.float32)
+    w = jnp.asarray(rng.choice([-1.0, 1.0], (N, n)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(xnor_matmul(x, w)), np.asarray(xnor_matmul_ref(x, w)))
+
+
+def test_pack_bipolar_bits():
+    x = jnp.asarray([[1.0, -1.0, 1.0, 1.0] + [-1.0] * 28])
+    p = np.asarray(pack_bipolar(x))
+    assert p.shape == (1, 1)
+    assert p[0, 0] == 0b1101
+
+
+@pytest.mark.parametrize("B,n,N,K,dtype", [
+    (8, 32, 16, 3, jnp.float32),
+    (19, 64, 40, 5, jnp.float32),
+    (128, 128, 128, 7, jnp.float32),
+    (5, 16, 200, 2, jnp.float32),
+])
+def test_fanin_matmul_sweep(B, n, N, K, dtype):
+    rng = np.random.default_rng(B + N)
+    x = jnp.asarray(rng.normal(size=(B, n)), dtype)
+    idx = jnp.asarray(rng.integers(0, n, (N, K)), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(N, K)), dtype)
+    bias = jnp.asarray(rng.normal(size=(N,)), dtype)
+    np.testing.assert_allclose(
+        np.asarray(fanin_matmul(x, idx, w, bias)),
+        np.asarray(fanin_matmul_ref(x, idx, w, bias)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_fanin_matmul_matches_dense(rng):
+    """Gather-matmul == dense matmul with the masked weight matrix."""
+    from repro.core.fcp import fanin_indices, topk_row_mask
+    B, n, N, K = 16, 32, 12, 4
+    w_dense = jnp.asarray(rng.normal(size=(N, n)), jnp.float32)
+    mask = topk_row_mask(w_dense, K)
+    w_masked = jnp.where(mask, w_dense, 0.0)
+    idx, _ = fanin_indices(np.asarray(mask), K)
+    w_k = jnp.take_along_axis(w_masked, idx, axis=1)
+    x = jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+    bias = jnp.zeros((N,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(fanin_matmul(x, idx, w_k, bias)),
+        np.asarray(dense_equivalent(x, w_masked, bias)),
+        rtol=1e-4, atol=1e-4)

@@ -1,0 +1,257 @@
+"""Training substrate: optimizer, checkpoint/restore, fault tolerance,
+gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.dist import compress as C
+from repro.dist.fault import Heartbeat, StepWatchdog, retry_step
+from repro.train import checkpoint as ckpt
+from repro.train.loop import Trainer, init_state, make_train_step
+from repro.train.optim import AdamW, SGD, global_norm
+from repro.train.schedules import warmup_cosine
+
+
+def _quadratic_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+def test_adamw_converges():
+    params, loss, target = _quadratic_problem()
+    opt = AdamW(lr=0.1)
+    st = opt.init(params)
+    g = jax.jit(jax.grad(loss))
+    for _ in range(300):
+        params, st = opt.update(g(params), st, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_sgd_converges():
+    params, loss, target = _quadratic_problem()
+    opt = SGD(lr=0.05, momentum=0.9)
+    st = opt.init(params)
+    g = jax.jit(jax.grad(loss))
+    for _ in range(200):
+        params, st = opt.update(g(params), st, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clip():
+    opt = AdamW(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    st = opt.init(params)
+    big = {"w": jnp.full(4, 100.0)}
+    _, st2 = opt.update(big, st, params)
+    assert float(global_norm(st2.mu)) <= 0.1 * 1.0 + 1e-6  # (1-b1)*clipped
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1e-3, 10, 100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(s(100)) == pytest.approx(1e-4, rel=1e-2)
+    assert float(s(55)) < float(s(20))
+
+
+def test_lm_loss_decreases_smoke():
+    cfg = get_arch("phi4-mini-3.8b", smoke=True)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    from repro.data.tokens import lm_batch
+    losses = []
+    for t in range(30):
+        toks, labels = lm_batch(cfg, 4, 128, 0, t)
+        state, m = step(state, {"tokens": jnp.asarray(toks),
+                                "labels": jnp.asarray(labels)})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 7, t)
+    got = ckpt.restore(path, t)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)), t, got)
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    t = _tree()
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ac.save(s, t)
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    steps = sorted(int(d[5:]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]  # gc keeps 2
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stale .tmp dir must never be picked up as a checkpoint."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / "step_00000002.tmp")  # simulated crash
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_trainer_resume(tmp_path):
+    cfg = get_arch("phi4-mini-3.8b", smoke=True)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    from repro.data.tokens import lm_batch
+
+    def batches():
+        t = 0
+        while True:
+            toks, labels = lm_batch(cfg, 2, 64, 0, t)
+            t += 1
+            yield {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    st = init_state(cfg, opt, jax.random.PRNGKey(0))
+    tr1 = Trainer(step, st, ckpt_dir=str(tmp_path), ckpt_every=5)
+    tr1.run(batches(), 10, log_every=100, log_fn=lambda *_: None)
+    # new trainer resumes at step 10
+    st2 = init_state(cfg, opt, jax.random.PRNGKey(1))
+    tr2 = Trainer(step, st2, ckpt_dir=str(tmp_path), ckpt_every=5)
+    assert tr2.step == 10
+
+
+def test_emergency_checkpoint(tmp_path):
+    cfg = get_arch("phi4-mini-3.8b", smoke=True)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    st = init_state(cfg, opt, jax.random.PRNGKey(0))
+    tr = Trainer(step, st, ckpt_dir=str(tmp_path), ckpt_every=1000)
+
+    def bad_batches():
+        yield {"tokens": jnp.zeros((2, 64), jnp.int32),
+               "labels": jnp.zeros((2, 64), jnp.int32)}
+        raise RuntimeError("node failure")
+
+    with pytest.raises(RuntimeError):
+        tr.run(bad_batches(), 5, log_fn=lambda *_: None)
+    assert ckpt.latest_step(str(tmp_path)) is not None  # emergency saved
+
+
+# ---------------------------------------------------------------------------
+# fault hooks
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(min_steps=10, k_sigma=3.0)
+    flagged = [wd.record(1.0 + 0.01 * (i % 3)) for i in range(20)]
+    assert not any(flagged)
+    assert wd.record(10.0)  # 10x step time -> straggler
+
+
+def test_retry_step_retries():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, max_retries=3, backoff_s=0.0)() == "ok"
+    assert calls["n"] == 3
+
+
+def test_heartbeat_stale(tmp_path):
+    hb1 = Heartbeat(str(tmp_path), 0)
+    hb2 = Heartbeat(str(tmp_path), 1)
+    hb1.beat(5)
+    hb2.beat(5)
+    assert hb1.stale_hosts(timeout_s=60) == []
+    # host 1 stops beating
+    import json
+    with open(tmp_path / "host_1.json") as f:
+        info = json.load(f)
+    info["time"] -= 120
+    with open(tmp_path / "host_1.json", "w") as f:
+        json.dump(info, f)
+    assert hb1.stale_hosts(timeout_s=60) == [1]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_topk_error_feedback_conserves_mass():
+    """sparse + residual == accumulated gradient (EF identity)."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)),
+                          jnp.float32)}
+    ef = C.init_ef(g)
+    sparse, ef2 = C.topk_compress(g, ef, frac=0.1)
+    np.testing.assert_allclose(
+        np.asarray(sparse["w"] + ef2.residual["w"]), np.asarray(g["w"]),
+        rtol=1e-6)
+    nz = float(jnp.mean(sparse["w"] != 0))
+    assert nz <= 0.12
+
+
+def test_sign_compress_two_values():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=64),
+                          jnp.float32)}
+    ef = C.init_ef(g)
+    q, ef2 = C.sign_compress(g, ef)
+    vals = np.unique(np.round(np.abs(np.asarray(q["w"])), 6))
+    assert len(vals) <= 2  # {scale} (and possibly 0)
+    np.testing.assert_allclose(np.asarray(q["w"] + ef2.residual["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_compressed_training_still_converges():
+    params, loss, target = _quadratic_problem()
+    opt = AdamW(lr=0.05)
+    st = opt.init(params)
+    ef = C.init_ef(params)
+    g = jax.jit(jax.grad(loss))
+    for _ in range(400):
+        grads, ef = C.topk_compress(g(params), ef, frac=0.4)
+        params, st = opt.update(grads, st, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=5e-2)
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=N must reproduce the full-batch gradients (linearity)."""
+    cfg = get_arch("phi4-mini-3.8b", smoke=True)
+    opt = AdamW(lr=1e-3)
+    from repro.data.tokens import lm_batch
+    toks, labels = lm_batch(cfg, 8, 64, 0, 0)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+    st = init_state(cfg, opt, jax.random.PRNGKey(0))
+    step1 = jax.jit(make_train_step(cfg, opt, grad_accum=1))
+    step4 = jax.jit(make_train_step(cfg, opt, grad_accum=4))
+    s1, m1 = step1(st, batch)
+    s4, m4 = step4(st, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=2e-3)
+    # parameters after one update must agree closely
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), s1.params, s4.params)
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-3
