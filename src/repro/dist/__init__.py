@@ -1,0 +1,12 @@
+"""Distributed substrate: mesh/sharding rules, gradient compression,
+fault tolerance and pipeline parallelism.
+
+Modules:
+  shardings — mesh context, strategy flags (OPTS), param/activation
+              partition rules, cross-mesh resharding helpers.
+  compress  — error-feedback gradient compression (top-k, signSGD).
+  fault     — heartbeat files, step watchdog, retrying step wrapper.
+  pipeline  — GPipe-style stage-parallel LM forward over the layer axis
+              (imported explicitly; it depends on repro.models).
+"""
+from repro.dist import compress, fault, shardings  # noqa: F401

@@ -1,0 +1,68 @@
+"""Error-feedback gradient compression for the data-parallel reduction.
+
+Both schemes keep the EF identity  compressed + residual == grad +
+residual_prev  exactly (float tolerance), which is what makes biased
+compressors converge (Karimireddy et al., "Error Feedback Fixes
+SignSGD"):
+
+  topk_compress — transmit only the largest ``frac`` of entries per
+      leaf; the rest accumulates in the residual until it matters.
+  sign_compress — 1-bit sign with a per-leaf mean-|.| scale (signSGD
+      with majority-vote-compatible magnitudes).
+
+State is a plain pytree (NamedTuple of a param-shaped tree), so it
+rides inside TrainState through jit/pjit and checkpointing untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class EFState(NamedTuple):
+    residual: PyTree
+
+
+def init_ef(params: PyTree) -> EFState:
+    """Zero residuals shaped like the grads (f32 accumulation)."""
+    return EFState(jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _accumulate(grads: PyTree, ef: EFState) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, ef.residual)
+
+
+def topk_compress(grads: PyTree, ef: EFState, frac: float
+                  ) -> Tuple[PyTree, EFState]:
+    """Keep the top ``frac`` entries (by magnitude) of grad+residual per
+    leaf; everything below the cut accumulates in the new residual."""
+    acc = _accumulate(grads, ef)
+
+    def one(a):
+        flat = jnp.abs(a.reshape(-1))
+        k = max(1, int(frac * flat.size))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(a) >= thresh, a, 0.0)
+
+    sparse = jax.tree_util.tree_map(one, acc)
+    residual = jax.tree_util.tree_map(jnp.subtract, acc, sparse)
+    return sparse, EFState(residual)
+
+
+def sign_compress(grads: PyTree, ef: EFState) -> Tuple[PyTree, EFState]:
+    """1-bit-per-entry quantization: sign(acc) * mean(|acc|) per leaf."""
+    acc = _accumulate(grads, ef)
+
+    def one(a):
+        scale = jnp.mean(jnp.abs(a))
+        return jnp.sign(a) * scale
+
+    q = jax.tree_util.tree_map(one, acc)
+    residual = jax.tree_util.tree_map(jnp.subtract, acc, q)
+    return q, EFState(residual)

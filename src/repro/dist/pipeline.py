@@ -1,0 +1,109 @@
+"""GPipe pipeline parallelism over the stacked layer axis.
+
+``pipeline_lm_forward`` partitions the (L, ...) layer stack of the
+unified LM across the 'model' mesh axis (one contiguous slab of layers
+per stage) and streams microbatches through the stages with a
+``shard_map`` + ``ppermute`` schedule:
+
+  step t:  stage 0 ingests microbatch t (while any remain); every stage
+           applies its layers to the microbatch it holds; every stage
+           hands its output to stage s+1 via one collective-permute.
+
+After ``n_micro + n_stages - 1`` steps every microbatch has crossed all
+stages; the last stage's outputs are psum-broadcast back so the result
+is replicated (bubble fraction (S-1)/(T), the classic GPipe schedule).
+The schedule is a ``lax.scan``, so the HLO stays O(1 step), and both
+``ppermute`` and ``psum`` are linear — ``jax.grad`` differentiates
+straight through the schedule (the reverse pass runs the ring backwards).
+
+Embedding and the final norm run outside the shard_map (they are not
+layer-partitioned); activation sharding constraints are suspended inside
+the manual region (see shardings.suspend_mesh).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import shardings as sh
+
+PyTree = Any
+
+_STAGE_AXIS = "model"
+
+
+def pipeline_lm_forward(cfg, params: PyTree, tokens, mesh,
+                        n_micro: int = 2):
+    """Stage-partitioned decoder forward. Returns (B, S, D) hidden
+    states (post final-norm), numerically matching models.lm.forward.
+
+    Requires cfg.n_layers % mesh.shape['model'] == 0 and
+    batch % n_micro == 0. Dense/MoE/SSM decoder-only families only (no
+    encoder-decoder cross-attention through the pipeline).
+    """
+    from repro.models import layers as L
+    from repro.models import lm
+
+    n_stages = int(dict(mesh.shape)[_STAGE_AXIS])
+    n_layers = cfg.n_layers
+    if n_layers % n_stages:
+        raise ValueError(
+            f"n_layers={n_layers} not divisible by {n_stages} stages")
+    if cfg.is_encdec:
+        raise NotImplementedError("pipeline over enc-dec not supported")
+
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]                     # (B, S, D)
+    b, s, d = x.shape
+    if b % n_micro:
+        raise ValueError(f"batch={b} not divisible by n_micro={n_micro}")
+    x_mb = x.reshape(n_micro, b // n_micro, s, d)
+    positions = jnp.arange(s)
+    n_steps = n_micro + n_stages - 1
+
+    def device_fn(x_mb_local, layers_local):
+        # x_mb_local: (n_micro, B/n_micro, S, D) replicated;
+        # layers_local: the L/n_stages layer slab owned by this stage.
+        stage = jax.lax.axis_index(_STAGE_AXIS)
+
+        def apply_slab(h):
+            def body(c, lp):
+                y, _ = lm._dec_block(cfg, lp, c, positions, None, False)
+                return y, None
+
+            h, _ = jax.lax.scan(body, h, layers_local)
+            return h
+
+        def step(carry, t):
+            state, outs = carry
+            inp = jax.lax.dynamic_index_in_dim(
+                x_mb_local, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            h = jnp.where(stage == 0, inp, state)
+            y = apply_slab(h)
+            # microbatch m exits the last stage at step m + n_stages - 1;
+            # later (warm-down) iterations of stage 0 recirculate garbage
+            # that never reaches the collection window.
+            out_idx = t - (n_stages - 1)
+            hit = (jnp.arange(n_micro) == out_idx) & (stage == n_stages - 1)
+            outs = jnp.where(hit[:, None, None, None], y[None], outs)
+            nxt = jax.lax.ppermute(
+                y, _STAGE_AXIS,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outs), None
+
+        carry0 = (jnp.zeros_like(x_mb_local[0]), jnp.zeros_like(x_mb_local))
+        (_, outs), _ = jax.lax.scan(step, carry0, jnp.arange(n_steps))
+        # only the last stage wrote into outs; broadcast it everywhere
+        return jax.lax.psum(outs, _STAGE_AXIS)
+
+    fn = shard_map(device_fn, mesh=mesh,
+                   in_specs=(P(), P(_STAGE_AXIS)),
+                   out_specs=P(), check_rep=False)
+    with sh.suspend_mesh():  # no global constraints inside manual region
+        out = fn(x_mb, params["layers"])
+    hidden = out.reshape(b, s, d)
+    return L.rms_norm(hidden, params["final_norm"], cfg.norm_eps)

@@ -1,0 +1,355 @@
+"""Partitioning rules + mesh context for every launcher and test.
+
+One module owns the whole layout story:
+
+  * ``use_mesh`` / ``active_mesh`` — a dynamic mesh context read at trace
+    time by the model code (no global jax state, composes with jit);
+  * ``OPTS`` / ``set_opts`` — strategy flags that flip between layouts
+    (expert parallelism, pure FSDP, serve-time tensor parallelism, ...)
+    without touching model code;
+  * ``param_pspec`` — the 2-D (fsdp x tensor) partition rule table for
+    every parameter in the unified LM schema.  Stacked-layer leaves
+    (leading L axis from the vmapped init) get a leading ``None``;
+  * ``constrain_*`` — activation constraints the model inserts on its
+    hot paths; all of them degrade to no-ops off-mesh and prune axes
+    that do not divide the dimension they shard (smoke shapes on tiny
+    meshes, 24-head archs on 16-way model axes, ...);
+  * ``params_shardings`` / ``batch_shardings`` / ``cache_pspec`` —
+    NamedSharding pytrees for device_put / pjit in/out shardings; the
+    same rules serve the elastic-rescale restore path (a checkpoint
+    written on one mesh restores onto any other).
+
+Axis convention: ``"data"`` is the batch/fsdp axis, ``"model"`` the
+tensor axis, and an optional leading ``"pod"`` axis extends data
+parallelism across the DCN boundary (launch/mesh.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Mesh context
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Any] = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Dynamic-scope mesh: model code reads it via ``active_mesh()`` at
+    trace time, so the same forward traces sharded or unsharded."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def active_mesh():
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def suspend_mesh():
+    """Temporarily hide the active mesh (no-op constraints).
+
+    Used while tracing ``shard_map`` bodies (dist/pipeline.py): inside
+    manual-sharding regions ``with_sharding_constraint`` on the global
+    mesh is meaningless and must not fire.
+    """
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = None
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH = prev
+
+
+# ---------------------------------------------------------------------------
+# Strategy flags
+# ---------------------------------------------------------------------------
+
+OPTS = {
+    "moe_ep": False,        # shard_map expert parallelism (models/layers.py)
+    "fsdp_pure": False,     # every mesh axis is data-parallel; params fsdp
+    "serve_tp_only": False,  # decode: tensor-parallel only, batch replicated
+    "seq_parallel": False,  # shard activation sequence axis over 'model'
+    "bf16_params": False,   # mixed-precision training (f32 master in opt)
+}
+
+
+def set_opts(**kwargs) -> dict:
+    """Set strategy flags; returns the previous values of the flags set."""
+    prev = {}
+    for k, v in kwargs.items():
+        if k not in OPTS:
+            raise KeyError(f"unknown sharding opt '{k}'; have {sorted(OPTS)}")
+        prev[k] = OPTS[k]
+        OPTS[k] = bool(v)
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis helpers
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_size(mesh, name: str) -> int:
+    return int(dict(mesh.shape).get(name, 1))
+
+
+def _dp_axes(mesh) -> Tuple[str, ...]:
+    """Data-parallel axes in mesh order (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _dp_for(mesh, batch: int):
+    """The widest data-parallel axis (group) that divides ``batch``.
+
+    Tries the full dp-axis product first (('pod','data') on multi-pod
+    meshes), then shorter prefixes, then the remaining single axes.
+    Returns a bare axis name, a tuple of names, or None (replicate).
+    """
+    axes = _dp_axes(mesh)
+    cands = [axes[:i] for i in range(len(axes), 0, -1)]
+    cands += [(a,) for a in axes[1:]]
+    best, best_size = None, 1
+    for cand in cands:
+        size = 1
+        for a in cand:
+            size *= _mesh_axis_size(mesh, a)
+        if size > best_size and batch % size == 0:
+            best, best_size = cand, size
+    if best is None:
+        return None
+    return best[0] if len(best) == 1 else best
+
+
+def batch_axes():
+    """Axes the leading batch dim shards over under the active mesh."""
+    mesh = active_mesh()
+    if mesh is None or OPTS["serve_tp_only"]:
+        return None
+    axes = _dp_axes(mesh)
+    if OPTS["fsdp_pure"]:
+        axes = tuple(mesh.axis_names)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    """KeyPath -> 'layers/attn/wq' style string."""
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key",
+                                 getattr(p, "idx", getattr(p, "name", p)))))
+    return "/".join(parts)
+
+
+# (regex on the path WITHOUT the stacked-layer prefix) -> spec for the
+# unstacked leaf.  First match wins; unmatched leaves replicate.
+_RULES: Sequence[Tuple[str, Tuple]] = (
+    (r"^embed$", ("model", "data")),         # (V, D): vocab=tensor, d=fsdp
+    (r"^lm_head$", ("data", "model")),       # (D, V)
+    (r"(^|/)(attn|cross)/(wq|wk|wv)$", ("data", "model")),
+    (r"(^|/)(attn|cross)/wo$", ("model", "data")),
+    (r"(^|/)mlp/(w1|w3|mask_w1)$", ("data", "model")),
+    (r"(^|/)mlp/(w2|mask_w2)$", ("model", "data")),
+    (r"(^|/)moe/router$", ("data", None)),   # (D, E): experts replicated
+    (r"(^|/)moe/(w1|w3)$", (None, "data", "model")),   # (E, D, F)
+    (r"(^|/)moe/w2$", (None, "model", "data")),        # (E, F, D)
+    (r"(^|/)mamba/in_proj$", ("data", "model")),       # (D, 2*Di)
+    (r"(^|/)mamba/out_proj$", ("model", "data")),      # (Di, D)
+    (r"(^|/)mamba/x_proj$", ("model", None)),          # (Di, R+2N)
+    (r"(^|/)mamba/dt_proj_w$", (None, "model")),       # (R, Di)
+    (r"(^|/)mamba/conv_w$", (None, "model")),          # (CW, Di)
+    (r"(^|/)mamba/A_log$", ("model", None)),           # (Di, N)
+)
+
+_STACKED = ("layers/", "enc_layers/")
+
+
+def param_pspec(path, leaf) -> P:
+    """Partition rule for one parameter leaf.
+
+    ``path`` is a jax KeyPath (or any sequence accepted by
+    ``_path_str``); ``leaf`` only contributes its ndim, so eval_shape
+    ShapeDtypeStructs work. Specs always have exactly ``leaf.ndim``
+    entries so rule tests can compare for equality.
+    """
+    name = _path_str(path)
+    ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    stacked = any(name.startswith(s) for s in _STACKED)
+    base = name.split("/", 1)[1] if stacked else name
+    base_ndim = ndim - 1 if stacked else ndim
+    spec: Tuple = (None,) * base_ndim
+    for pat, rule in _RULES:
+        if re.search(pat, base):
+            if len(rule) == base_ndim:
+                spec = rule
+            break
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def _prune_spec(mesh, shape, spec) -> Tuple:
+    """Drop sharded axes that are absent from ``mesh`` or do not divide
+    their dimension — the guard that lets one rule table serve smoke
+    configs, degraded meshes and full production shapes alike."""
+    if len(spec) > len(shape):
+        raise ValueError(
+            f"spec {spec} has more entries than array rank {len(shape)}")
+    names = set(mesh.axis_names)
+    out = []
+    used = set()
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        group = (ax,) if isinstance(ax, str) else tuple(ax)
+        while group:
+            if all(a in names for a in group) and not (set(group) & used):
+                size = 1
+                for a in group:
+                    size *= _mesh_axis_size(mesh, a)
+                if dim % size == 0:
+                    break
+            group = group[:-1]
+        if group:
+            used.update(group)
+            out.append(group[0] if len(group) == 1 else group)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def params_shardings(mesh, params: PyTree) -> PyTree:
+    """NamedSharding pytree for a param (or param-shaped) pytree.
+
+    Works on concrete arrays and ShapeDtypeStructs; used both to
+    device_put fresh params and as the target shardings when restoring a
+    checkpoint onto a different mesh (elastic rescale)."""
+    def one(path, leaf):
+        spec = _prune_spec(mesh, leaf.shape, tuple(param_pspec(path, leaf)))
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings (launchers + dry-run)
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh, specs: PyTree) -> PyTree:
+    """Shard every model input on its leading (batch) axis."""
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dp = _dp_for(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(one, specs)
+
+
+def cache_pspec(mesh, cache: PyTree) -> PyTree:
+    """Decode-cache shardings (see models/lm.py init_cache layout).
+
+    KV tensors (L, B, W, KV, dh) shard heads over 'model' when the
+    kv-head count divides it, else the ring axis W (flash-decode keeps
+    the cache sequence-sharded; layers.decode_attention mirrors this
+    choice) — never both.
+    """
+    msize = _mesh_axis_size(mesh, "model")
+
+    def one(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        shape = leaf.shape
+        if name in ("k", "v"):
+            dp = _dp_for(mesh, shape[1])
+            if shape[3] % msize == 0:
+                spec = (None, dp, None, "model", None)
+            elif shape[2] % msize == 0:
+                spec = (None, dp, "model", None, None)
+            else:
+                spec = (None, dp, None, None, None)
+        elif name == "positions":
+            spec = (_dp_for(mesh, shape[0]), None)
+        elif name == "ssm":                   # (L, B, Di, N)
+            spec = (None, _dp_for(mesh, shape[1]), "model", None)
+        elif name == "conv":                  # (L, B, CW-1, Di)
+            spec = (None, _dp_for(mesh, shape[1]), None, "model")
+        elif name == "enc_out":               # (B, F, D)
+            spec = (_dp_for(mesh, shape[0]), None, None)
+        else:
+            spec = (None,) * leaf.ndim
+        return NamedSharding(mesh, P(*_prune_spec(mesh, shape, spec)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (model hot paths)
+# ---------------------------------------------------------------------------
+
+def constraint(x, *spec):
+    """with_sharding_constraint against the active mesh; no-op off-mesh.
+
+    Axes that are missing from the mesh or do not divide the dimension
+    are pruned instead of erroring."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    pruned = _prune_spec(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*pruned)))
+
+
+def constrain_hidden(x):
+    """(B, S, D) residual-stream states: batch over the dp axes (all
+    axes under fsdp_pure), sequence over 'model' under seq_parallel."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = [batch_axes()] + [None] * (x.ndim - 1)
+    if OPTS["seq_parallel"] and not OPTS["fsdp_pure"] and x.ndim >= 3:
+        spec[1] = "model"
+    return constraint(x, *spec)
+
+
+def constrain_heads(q):
+    """(B, S, H, dh) attention tensors: heads over 'model' (tensor
+    parallelism); under fsdp_pure there is no tensor axis to use."""
+    mesh = active_mesh()
+    if mesh is None:
+        return q
+    spec = [batch_axes()] + [None] * (q.ndim - 1)
+    if not OPTS["fsdp_pure"]:
+        spec[-2] = "model"
+    return constraint(q, *spec)
+
+
+def constrain_logits(logits):
+    """(B, C, Vp) loss-chunk logits: vocab over 'model' so the lse
+    reduction stays sharded until the final scalar."""
+    mesh = active_mesh()
+    if mesh is None:
+        return logits
+    spec = [batch_axes()] + [None] * (logits.ndim - 1)
+    if not OPTS["fsdp_pure"]:
+        spec[-1] = "model"
+    return constraint(logits, *spec)

@@ -1,6 +1,6 @@
 """espresso-lite: correctness + quality properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import espresso as esp
 

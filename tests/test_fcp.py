@@ -1,7 +1,7 @@
 """Fanin-constrained pruning: masks, schedules, ADMM."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import fcp
 

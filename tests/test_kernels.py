@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hyp_compat import given, settings, st
 
 from repro.kernels.fanin_matmul import (dense_equivalent, fanin_matmul,
                                         fanin_matmul_ref)

@@ -3,8 +3,7 @@ collapses into truth tables with BIT-EXACT equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import fcp
 from repro.core.logic_infer import LogicNetwork, classify, hardware_report
