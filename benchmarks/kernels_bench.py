@@ -38,6 +38,25 @@ def run() -> Dict:
     out["lut_layer_ref_us"] = _t(f_ref, codes)
     out["lut_layer_pallas_us"] = _t(f_pal, codes)
 
+    # aig_sim: bit-parallel simulation of a random-logic AIG, 8k samples
+    from repro.kernels.aig_sim import aig_sim, aig_sim_ref
+    from repro.synth import AIG
+    from repro.synth.from_sop import table_to_aig
+    n_vars = 8
+    aig = AIG(n_vars)
+    aig.outputs = [
+        table_to_aig(aig, rng.random(1 << n_vars) < 0.5, None,
+                     [2 * (i + 1) for i in range(n_vars)])
+        for _ in range(4)]
+    f0, f1 = aig.fanin_arrays()
+    words = jnp.asarray(rng.integers(0, 1 << 31, (n_vars, 256)), jnp.int32)
+    f0j, f1j = jnp.asarray(f0), jnp.asarray(f1)
+    out["aig_sim_ref_us"] = _t(
+        jax.jit(lambda w: aig_sim_ref(w, f0j, f1j, n_vars)), words)
+    out["aig_sim_pallas_us"] = _t(
+        lambda w: aig_sim(np.asarray(w).view(np.uint32), f0, f1, n_vars),
+        words, iters=3)
+
     # xnor: 256x4096 @ 4096x256
     from repro.kernels.xnor_popcount import (pack_bipolar, xnor_matmul,
                                              xnor_matmul_ref)

@@ -1,10 +1,12 @@
 """Benchmark driver — one function per paper table/figure + repo extras.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = host wall
-time where measured; hardware-model metrics land in the derived column).
+time where measured; hardware-model metrics land in the derived column)
+and, per section, writes a machine-readable ``BENCH_<section>.json`` at
+the repo root so the perf trajectory is tracked across PRs.
 
-  table1   — paper Table I: JSC-S/M/L accuracy + LUT/FF/fmax vs the
-             LogicNets baseline (ratios = the paper's claims)
+  table1   — paper Table I: JSC-S/M/L accuracy + measured (repro.synth)
+             and modeled LUT/FF/fmax vs the LogicNets baseline
   latency  — logic path vs dense float vs XNOR, µs/call
   ablation — activation-selection + FCP-schedule ablations
   kernels  — Pallas kernel microbenchmarks vs oracles
@@ -18,10 +20,27 @@ import os
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_ROWS: dict = {}
 
 
 def _emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+    section = name.split("/", 1)[0]
+    _ROWS.setdefault(section, []).append(
+        {"name": name, "us_per_call": round(us, 1), "derived": derived})
+
+
+def _write_bench_json(all_results: dict) -> None:
+    """One BENCH_<section>.json per section at the repo root: the CSV rows
+    plus that section's full result object (derived metrics)."""
+    for section, rows in _ROWS.items():
+        path = os.path.join(REPO_ROOT, f"BENCH_{section}.json")
+        with open(path, "w") as f:
+            json.dump({"section": section, "rows": rows,
+                       "results": all_results.get(section)},
+                      f, indent=1, default=str)
 
 
 def main() -> None:
@@ -48,6 +67,10 @@ def main() -> None:
         for k, r in res.items():
             _emit(f"table1/{k}", (time.time() - t0) * 1e6 / 3,
                   f"acc={r['accuracy']:.4f};luts={r['nullanet']['luts']};"
+                  f"luts_backend={r['nullanet']['backend']};"
+                  f"luts_model={r['nullanet_model']['luts']};"
+                  f"depth={r['nullanet']['depth']};"
+                  f"synth_equiv={r['synth']['equivalent']};"
                   f"lut_red={r['lut_reduction_x']}x;"
                   f"fmax={r['nullanet']['fmax_mhz']}MHz;"
                   f"lat_red={r['latency_reduction_x']}x")
@@ -88,6 +111,7 @@ def main() -> None:
 
     with open(os.path.join(RESULTS_DIR, "bench_results.json"), "w") as f:
         json.dump(all_results, f, indent=1, default=str)
+    _write_bench_json(all_results)
 
 
 if __name__ == "__main__":

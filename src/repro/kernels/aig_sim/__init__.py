@@ -1,0 +1,2 @@
+from .ops import aig_sim  # noqa: F401
+from .ref import aig_sim_ref  # noqa: F401

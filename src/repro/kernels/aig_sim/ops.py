@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the aig_sim Pallas kernel (pads + unpads)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .aig_sim import DEFAULT_BW, aig_sim_pallas
+
+
+def aig_sim(pi_words: np.ndarray, f0: np.ndarray, f1: np.ndarray,
+            n_pis: int, interpret: bool = True) -> np.ndarray:
+    """Simulate an AIG on packed words; returns the (n_nodes, W) uint32
+    value plane (same layout as repro.synth.simulate._simulate_np).
+
+    pi_words: (n_pis, W) uint32; f0/f1: (n_ands,) int32 fanin literals.
+    """
+    pi_words = np.ascontiguousarray(pi_words, np.uint32)
+    n_ands = int(np.asarray(f0).shape[0])
+    w = pi_words.shape[1]
+    if n_ands == 0 or n_pis == 0 or w == 0:
+        vals = np.zeros((1 + n_pis + n_ands, w), np.uint32)
+        vals[1: n_pis + 1] = pi_words
+        return vals
+    bw = min(DEFAULT_BW, max(1, w))
+    pad = (-w) % bw
+    if pad:
+        pi_words = np.concatenate(
+            [pi_words, np.zeros((n_pis, pad), np.uint32)], axis=1)
+    out = aig_sim_pallas(
+        jnp.asarray(pi_words.view(np.int32)), jnp.asarray(f0, jnp.int32),
+        jnp.asarray(f1, jnp.int32), n_pis, n_ands, block_w=bw,
+        interpret=interpret)
+    return np.ascontiguousarray(np.asarray(out)[:, :w]).view(np.uint32)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the aig_sim kernel: same linear node walk, built
+as a lax.scan over the fanin literal arrays with a dynamically-updated
+value plane (functional analogue of the kernel's in-place row stores)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def aig_sim_ref(pi_words: jax.Array, f0: jax.Array, f1: jax.Array,
+                n_pis: int) -> jax.Array:
+    """pi_words: (n_pis, W) int32; f0/f1: (n_ands,) int32 literals.
+    Returns the (1 + n_pis + n_ands, W) int32 value plane."""
+    n_ands = f0.shape[0]
+    w = pi_words.shape[1]
+    vals = jnp.zeros((1 + n_pis + n_ands, w), jnp.int32)
+    vals = vals.at[1: n_pis + 1].set(pi_words.astype(jnp.int32))
+
+    def step(vals, inp):
+        i, l0, l1 = inp
+        v0 = vals[l0 >> 1] ^ (-(l0 & 1))
+        v1 = vals[l1 >> 1] ^ (-(l1 & 1))
+        return vals.at[1 + n_pis + i].set(v0 & v1), None
+
+    idx = jnp.arange(n_ands, dtype=jnp.int32)
+    vals, _ = jax.lax.scan(step, vals, (idx, f0.astype(jnp.int32),
+                                        f1.astype(jnp.int32)))
+    return vals

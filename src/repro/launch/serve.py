@@ -19,7 +19,7 @@ from repro.configs import get_arch
 
 
 def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
-                use_pallas: bool):
+                use_pallas: bool, backend: str = "gather"):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -32,7 +32,13 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
     print(f"  test acc: {res.test_acc:.4f}")
     print("[serve] compiling to fixed-function logic ...")
     net = to_logic(cfg, res.params, res.masks, res.bn_state)
-    eng = LogicEngine(net, cfg.n_classes, use_pallas=use_pallas)
+    if backend == "bitplane":
+        print("[serve] synthesizing mapped 6-LUT netlist (repro.synth) ...")
+    eng = LogicEngine(net, cfg.n_classes, use_pallas=use_pallas,
+                      backend=backend)
+    if backend == "bitplane":
+        print(f"  mapped: {eng.bitnet.mapped.n_luts} LUTs, "
+              f"depth {eng.bitnet.mapped.depth}")
     (_, _), (xte, yte) = train_test()
     reqs = [xte[i * 64: (i + 1) * 64] for i in range(n_requests)]
     results, stats = eng.serve_queue(reqs)
@@ -73,9 +79,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--backend", choices=["gather", "pallas", "bitplane"],
+                    default="gather",
+                    help="logic inference path (bitplane = mapped netlist)")
     args = ap.parse_args(argv)
     if args.mode == "logic":
-        serve_logic(args.jsc, args.train_steps, args.requests, args.pallas)
+        serve_logic(args.jsc, args.train_steps, args.requests, args.pallas,
+                    backend=args.backend)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)
 

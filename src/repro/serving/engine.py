@@ -33,18 +33,39 @@ from repro.models import lm
 
 @dataclasses.dataclass
 class LogicEngine:
-    """Micro-batching frontend over a compiled LogicNetwork."""
+    """Micro-batching frontend over a compiled LogicNetwork.
+
+    ``backend`` selects the inference representation:
+      * ``"gather"``   — per-neuron truth-table gathers (pure jnp oracle);
+      * ``"pallas"``   — same tables through the lut_layer Pallas kernel;
+      * ``"bitplane"`` — the ``repro.synth`` mapped 6-LUT netlist run as
+        packed bitplane ops (32 samples per uint32 lane) — no per-neuron
+        gathers at all. Argmax outputs are identical across backends.
+    """
 
     net: LogicNetwork
     n_classes: int
     max_batch: int = 256
     max_wait_ms: float = 0.2
-    use_pallas: bool = False
+    use_pallas: bool = False            # legacy alias for backend="pallas"
+    backend: str = "gather"
+    synth_effort: int = 1
 
     def __post_init__(self):
+        if self.use_pallas and self.backend == "gather":
+            self.backend = "pallas"
+        if self.backend == "bitplane":
+            from repro.synth import compile_logic_network
+            self.bitnet = compile_logic_network(
+                self.net, effort=self.synth_effort)
+            self._fn = lambda x: self.bitnet.classify(x, self.n_classes)
+            return
+        if self.backend not in ("gather", "pallas"):
+            raise ValueError(f"unknown LogicEngine backend {self.backend!r}")
+        use_pallas = self.backend == "pallas"
         self._fn = jax.jit(
             lambda x: jnp.argmax(
-                self.net(x, use_pallas=self.use_pallas)
+                self.net(x, use_pallas=use_pallas)
                 [..., : self.n_classes], axis=-1))
         # warm the jit cache at the serving batch size
         self._fn(jnp.zeros((self.max_batch, self.net.n_inputs), jnp.float32))

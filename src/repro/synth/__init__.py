@@ -1,0 +1,36 @@
+"""repro.synth — multi-level logic synthesis and k-LUT technology mapping.
+
+The offline replacement for the Vivado step of NullaNet Tiny's flow:
+
+    SOP covers (core.espresso)
+      -> AIG with structural hashing          (synth.aig / synth.from_sop)
+      -> balance + DAG-aware rewriting        (synth.rewrite)
+      -> depth-optimal 6-LUT mapping + area   (synth.lutmap)
+      -> measured LUTs/depth, Verilog,        (synth.executor)
+         and bit-parallel TPU/CPU execution   (synth.simulate,
+                                               kernels.aig_sim)
+
+``compile_logic_network(net)`` is the one-call pipeline from a compiled
+``LogicNetwork`` to its executable mapped netlist.
+"""
+from .aig import AIG, CONST0, CONST1, lit, lit_compl, lit_not, lit_var
+from .cuts import Cut, enumerate_cuts
+from .executor import BitplaneNetwork, emit_verilog, execute_packed
+from .from_sop import cover_to_aig, layer_to_aig, network_to_aig, table_to_aig
+from .lutmap import MappedLUT, MappedNetwork, map_aig
+from .rewrite import balance, optimize, rewrite
+from .simulate import (exhaustive_equiv, input_patterns, pack_bits,
+                       random_equiv, random_words, simulate, unpack_bits)
+
+
+def synthesize(aig: AIG, effort: int = 1, k: int = 6) -> MappedNetwork:
+    """balance/rewrite rounds (``effort``; 0 = map the raw AIG) followed
+    by k-LUT mapping with area recovery."""
+    if effort > 0:
+        aig = optimize(aig, rounds=effort)
+    return map_aig(aig, k=k)
+
+
+def compile_logic_network(net, effort: int = 1, k: int = 6) -> BitplaneNetwork:
+    """LogicNetwork -> optimized mapped netlist, ready to execute."""
+    return BitplaneNetwork.from_logic_network(net, effort=effort, k=k)

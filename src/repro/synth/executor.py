@@ -1,0 +1,212 @@
+"""Mapped-netlist execution (packed bitplanes) and Verilog emission.
+
+The mapped 6-LUT network is the serving representation: instead of one
+table gather per neuron (``repro.core.logic_infer``), inference packs 32
+samples per uint32 lane and evaluates each LUT *level* as vectorized
+bitwise ops — a Shannon-cofactor fold of every LUT's 64-bit INIT vector
+over its six input planes (6 select steps, each one AND/ANDN/OR over the
+whole level). Per 32 samples, a LUT costs ~18 word ops regardless of
+batch size — the TPU/CPU analogue of the FPGA's spatial LUT fabric.
+
+``emit_verilog`` prints the same netlist structurally (one INIT-indexed
+assign per LUT), i.e. the post-mapping artifact the paper gets out of
+Vivado, where ``repro.core.netlist`` only emitted pre-mapping SOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .aig import lit_compl, lit_var, tt_expand
+from .lutmap import MappedNetwork
+from .simulate import pack_bits, unpack_bits
+
+# wire numbering for execution/emission:
+#   wire 0            = constant 0
+#   wires 1..n_pis    = primary inputs
+#   wires n_pis+1+i   = output of LUT i
+_CONST_WIRE = 0
+
+
+@dataclasses.dataclass
+class _LevelArrays:
+    leaf_idx: np.ndarray     # (L, k) int32 wire indices (const-padded)
+    tt_bits: np.ndarray      # (L, 2^k) uint32 0 / 0xFFFFFFFF masks
+    out_wires: np.ndarray    # (L,) int32 wire index written
+
+
+@dataclasses.dataclass
+class _Plan:
+    """Precompiled execution plan — everything per-call execution needs
+    that does not depend on the batch (built once, reused per batch)."""
+    levels: List[_LevelArrays]
+    out_idx: np.ndarray      # (n_outputs,) int32 wire index per output
+    out_neg: np.ndarray      # (n_outputs,) bool complement flags
+
+
+def _wire_of(mapped: MappedNetwork, node: int, lut_pos: dict) -> int:
+    if node == 0:
+        return _CONST_WIRE
+    if node <= mapped.n_pis:
+        return node
+    return mapped.n_pis + 1 + lut_pos[node]
+
+
+def _compile_plan(mapped: MappedNetwork) -> _Plan:
+    k = mapped.k
+    lut_pos = {l.root: i for i, l in enumerate(mapped.luts)}
+    lvl = mapped.levels()
+    by_level: dict = {}
+    for i, l in enumerate(mapped.luts):
+        by_level.setdefault(lvl[l.root], []).append(i)
+    levels: List[_LevelArrays] = []
+    for level in sorted(by_level):
+        idxs = by_level[level]
+        leaf_idx = np.zeros((len(idxs), k), np.int32)
+        tt_bits = np.zeros((len(idxs), 1 << k), np.uint32)
+        out_wires = np.zeros((len(idxs),), np.int32)
+        for row, i in enumerate(idxs):
+            l = mapped.luts[i]
+            m = len(l.leaves)
+            for j, x in enumerate(l.leaves):
+                leaf_idx[row, j] = _wire_of(mapped, x, lut_pos)
+            tt = tt_expand(l.tt, m, k)     # pad slots read the const wire
+            for r in range(1 << k):
+                if (tt >> r) & 1:
+                    tt_bits[row, r] = 0xFFFFFFFF
+            out_wires[row] = mapped.n_pis + 1 + i
+        levels.append(_LevelArrays(leaf_idx, tt_bits, out_wires))
+    out_idx = np.array([_wire_of(mapped, lit_var(o), lut_pos)
+                        for o in mapped.outputs], np.int32)
+    out_neg = np.array([bool(lit_compl(o)) for o in mapped.outputs], bool)
+    return _Plan(levels, out_idx, out_neg)
+
+
+def execute_packed(mapped: MappedNetwork, pi_words: np.ndarray,
+                   plan: Optional[_Plan] = None) -> np.ndarray:
+    """pi_words: (n_pis, W) uint32 -> output words (n_outputs, W)."""
+    pi_words = np.asarray(pi_words, np.uint32)
+    assert pi_words.shape[0] == mapped.n_pis
+    w = pi_words.shape[1]
+    if plan is None:
+        plan = _compile_plan(mapped)
+    wires = np.zeros((mapped.n_pis + 1 + mapped.n_luts, w), np.uint32)
+    wires[1: mapped.n_pis + 1] = pi_words
+    for la in plan.levels:
+        ins = wires[la.leaf_idx]                       # (L, k, W)
+        state = np.broadcast_to(
+            la.tt_bits[:, :, None], la.tt_bits.shape + (w,)).copy()
+        half = state.shape[1] // 2
+        for j in range(la.leaf_idx.shape[1] - 1, -1, -1):
+            sel = ins[:, j:j + 1, :]                   # (L, 1, W)
+            state = (state[:, :half] & ~sel) | (state[:, half:] & sel)
+            half //= 2
+        wires[la.out_wires] = state[:, 0, :]
+    out = wires[plan.out_idx]
+    out[plan.out_neg] = ~out[plan.out_neg]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Whole-network bitplane inference (LogicNetwork-compatible front end)
+# ---------------------------------------------------------------------------
+
+class BitplaneNetwork:
+    """A compiled ``LogicNetwork`` executed through the mapped netlist.
+
+    ``from_logic_network`` runs the full synthesis pipeline
+    (SOP -> AIG -> balance/rewrite -> k-LUT map); ``__call__`` matches
+    ``LogicNetwork.__call__`` bit-exactly on every reachable input.
+    """
+
+    def __init__(self, net, mapped: MappedNetwork):
+        self.net = net
+        self.mapped = mapped
+        self._plan = _compile_plan(mapped)
+        self.in_bits = net.in_spec.code_bits
+        last = net.layers[-1]
+        self.out_bits = last.out_spec.code_bits
+        self.out_levels = np.asarray(last.out_spec.levels(last.out_alpha))
+
+    @classmethod
+    def from_logic_network(cls, net, effort: int = 1,
+                           k: int = 6) -> "BitplaneNetwork":
+        from . import synthesize        # lazy: package init imports us
+        from .from_sop import network_to_aig
+        return cls(net, synthesize(network_to_aig(net), effort=effort, k=k))
+
+    def apply_codes(self, codes: np.ndarray) -> np.ndarray:
+        """(B, n_inputs) input codes -> (B, n_out_neurons) output codes."""
+        codes = np.asarray(codes, np.int64)
+        batch = codes.shape[0]
+        # codes -> input bitplanes (wire i*in_bits+b = bit b of code i)
+        planes = np.empty((codes.shape[1] * self.in_bits, batch), np.uint8)
+        for b in range(self.in_bits):
+            planes[b::self.in_bits] = ((codes >> b) & 1).T
+        out_words = execute_packed(self.mapped, pack_bits(planes),
+                                   plan=self._plan)
+        out_bits = unpack_bits(out_words, batch)       # (n_out_wires, B)
+        n_out = out_bits.shape[0] // self.out_bits
+        out_codes = np.zeros((batch, n_out), np.int64)
+        for b in range(self.out_bits):
+            out_codes |= out_bits[b::self.out_bits].T.astype(np.int64) << b
+        return out_codes
+
+    def __call__(self, x) -> np.ndarray:
+        """Real inputs -> decoded real outputs (LogicNetwork contract)."""
+        codes = np.asarray(self.net.quantize_inputs(x))
+        return self.out_levels[self.apply_codes(codes)]
+
+    def classify(self, x, n_classes: int) -> np.ndarray:
+        vals = self(x)
+        return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Verilog emission of the mapped netlist
+# ---------------------------------------------------------------------------
+
+def emit_verilog(mapped: MappedNetwork, name: str = "mapped_logic") -> str:
+    """Structural Verilog: one INIT-vector-indexed assign per LUT (the
+    textual form of a LUT6 instance, synthesizable and simulable)."""
+    k = mapped.k
+    lut_pos = {l.root: i for i, l in enumerate(mapped.luts)}
+
+    def wname(node: int) -> str:
+        w = _wire_of(mapped, node, lut_pos)
+        if w == _CONST_WIRE:
+            return "1'b0"
+        if w <= mapped.n_pis:
+            return f"x[{w - 1}]"
+        return f"n{w}"
+
+    lines = [
+        f"// {name}: {mapped.n_luts} LUT{k}s, depth {mapped.depth}",
+        f"// generated by repro.synth (AIG -> rewrite -> {k}-LUT map)",
+        f"module {name} (",
+        f"  input  wire [{mapped.n_pis - 1}:0] x,",
+        f"  output wire [{len(mapped.outputs) - 1}:0] y",
+        ");",
+    ]
+    for i, l in enumerate(mapped.luts):
+        m = len(l.leaves)
+        tt = tt_expand(l.tt, m, k)
+        init = f"{1 << k}'h{tt:0{(1 << k) // 4}x}"
+        ins = [wname(x) for x in l.leaves]
+        ins += ["1'b0"] * (k - m)            # pad unused select inputs
+        sel = ", ".join(reversed(ins))       # MSB first in concatenation
+        w = mapped.n_pis + 1 + i
+        lines.append(f"  wire n{w};")
+        lines.append(f"  wire [{(1 << k) - 1}:0] n{w}_init = {init};  // LUT{k}")
+        lines.append(f"  assign n{w} = n{w}_init[{{{sel}}}];")
+    for i, o in enumerate(mapped.outputs):
+        inv = "~" if lit_compl(o) else ""
+        src = wname(lit_var(o))
+        if src == "1'b0" and inv:
+            lines.append(f"  assign y[{i}] = 1'b1;")
+        else:
+            lines.append(f"  assign y[{i}] = {inv}{src};")
+    lines.append("endmodule")
+    return "\n".join(lines)
