@@ -1,0 +1,276 @@
+"""Load-generator harness for the ``repro.serve`` scheduler.
+
+Drives the micro-batching scheduler end-to-end on JSC-S across all
+three ``LogicEngine`` backends and writes ``BENCH_serve.json`` at the
+repo root:
+
+  * open-loop   — seeded Poisson arrivals at an offered QPS, submitted
+    in real time into a thread-driven scheduler (the arrival process
+    does not wait for completions — the honest overload model);
+  * closed-loop — a fixed concurrency of submit→wait workers (peak
+    sustainable throughput at bounded in-flight);
+  * baseline    — the *legacy* sequential ``serve_queue`` semantics
+    (one blocking padded evaluation per request), replayed against the
+    same arrival trace with a busy-server queueing model so its
+    latencies are true enqueue→complete times, head-of-line wait
+    included — the number the old stats loop hid.
+
+  PYTHONPATH=src:. python benchmarks/loadgen.py --fast \
+      --backends gather --requests 1000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BACKENDS = ("gather", "pallas", "bitplane")
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals_us(n: int, qps: float, seed: int = 0) -> np.ndarray:
+    """Cumulative open-loop arrival offsets (µs) at offered rate qps."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1e6 / qps, n)
+    gaps[0] = 0.0
+    return np.cumsum(gaps)
+
+
+def _pace_until(target_us: float, t0: float) -> None:
+    """Sleep until target_us past t0. Sleep-only on purpose: a spin
+    wait would hold the GIL against the scheduler thread's (numpy)
+    executor and serialize the very batches being measured."""
+    while True:
+        rem = target_us - (time.perf_counter() * 1e6 - t0)
+        if rem <= 0:
+            return
+        time.sleep(rem * 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Legacy sequential baseline (busy-server replay)
+# ---------------------------------------------------------------------------
+
+def measure_sequential_us(engine, xs: np.ndarray) -> np.ndarray:
+    """Real per-call wall times of the pre-scheduler serving model: one
+    blocking padded evaluation per request (what the seed's
+    ``serve_queue`` loop executed and the only latency it reported)."""
+    n = xs.shape[0]
+    call_us = np.empty(n)
+    for i in range(n):
+        t0 = time.perf_counter()
+        engine.exec_batch(xs[i: i + 1])
+        call_us[i] = (time.perf_counter() - t0) * 1e6
+    return call_us
+
+
+def _lat_stats(lat: np.ndarray, span_us: float) -> Dict[str, float]:
+    return {
+        "completed": int(lat.shape[0]),
+        "p50_us": float(np.percentile(lat, 50)),
+        "p95_us": float(np.percentile(lat, 95)),
+        "p99_us": float(np.percentile(lat, 99)),
+        "mean_us": float(lat.mean()),
+        "qps": lat.shape[0] / (span_us * 1e-6) if span_us > 0 else 0.0,
+    }
+
+
+def replay_busy_server(arrivals_us: np.ndarray,
+                       call_us: np.ndarray) -> Dict[str, float]:
+    """True enqueue→complete latency of a sequential server under an
+    arrival trace: start = max(arrival, previous finish). This is the
+    queueing the legacy per-call timing loop hid — under load the
+    head-of-line wait, not the evaluation, dominates."""
+    n = arrivals_us.shape[0]
+    lat = np.empty(n)
+    end_prev = arrivals_us[0]
+    for i in range(n):
+        end_prev = max(arrivals_us[i], end_prev) + call_us[i]
+        lat[i] = end_prev - arrivals_us[i]
+    return _lat_stats(lat, end_prev - arrivals_us[0])
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-driven load generators
+# ---------------------------------------------------------------------------
+
+def run_open_loop(executor, xs: np.ndarray, qps: float, seed: int = 0,
+                  max_batch: int = 256, max_wait_us: float = 200.0):
+    """Real-time Poisson open loop into a threaded scheduler."""
+    from repro.serve import MicroBatchScheduler, RequestRejected, SchedConfig
+
+    n = xs.shape[0]
+    cfg = SchedConfig(max_batch=max_batch, max_wait_us=max_wait_us,
+                      max_queue=2 * n)
+    sched = MicroBatchScheduler(executor, cfg).start()
+    arrivals = poisson_arrivals_us(n, qps, seed)
+    futs: List = [None] * n
+    t0 = time.perf_counter() * 1e6
+    for i in range(n):
+        _pace_until(arrivals[i], t0)
+        try:
+            futs[i] = sched.submit(xs[i])
+        except RequestRejected:
+            pass
+    sched.stop(drain=True)
+    results = np.array([-1 if f is None else int(f.result(timeout=30))
+                        for f in futs], np.int32)
+    return results, sched.metrics.snapshot()
+
+
+def run_closed_loop(executor, xs: np.ndarray, concurrency: int = 32,
+                    max_batch: int = 256, max_wait_us: float = 200.0):
+    """Fixed in-flight submit→wait workers (peak throughput probe)."""
+    from repro.serve import MicroBatchScheduler, SchedConfig
+
+    n = xs.shape[0]
+    cfg = SchedConfig(max_batch=max_batch, max_wait_us=max_wait_us,
+                      max_queue=2 * n)
+    sched = MicroBatchScheduler(executor, cfg).start()
+    results = np.full((n,), -1, np.int32)
+    it = iter(range(n))
+    lock = threading.Lock()
+
+    def worker():
+        while True:
+            with lock:
+                i = next(it, None)
+            if i is None:
+                return
+            results[i] = int(sched.submit(xs[i]).result(timeout=30))
+
+    threads = [threading.Thread(target=worker)
+               for _ in range(min(concurrency, n))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.stop(drain=True)
+    return results, sched.metrics.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end JSC-S benchmark
+# ---------------------------------------------------------------------------
+
+def _snap_row(snap: Dict) -> Dict[str, float]:
+    keys = ("completed", "rejected", "p50_us", "p95_us", "p99_us",
+            "mean_us", "qps", "n_batches", "mean_batch_rows",
+            "mean_batch_occupancy", "max_queue_depth")
+    return {k: (round(snap[k], 3) if isinstance(snap[k], float)
+                else snap[k]) for k in keys}
+
+
+def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
+        n_requests: Optional[int] = None, qps: Optional[float] = None,
+        loadgen: str = "both", n_replicas: int = 1, steps: Optional[int] = None,
+        seed: int = 0, write_json: bool = True) -> Dict:
+    """Train JSC-S once, then loadgen every backend through the
+    scheduler; returns (and optionally writes) the BENCH_serve record."""
+    from repro.configs.jsc import JSC_S
+    from repro.data.jsc import train_test
+    from repro.models.mlp import to_logic
+    from repro.serve import build_logic_replicas
+    from repro.serving.engine import LogicEngine
+    from repro.train.jsc_trainer import train_jsc
+
+    n_requests = n_requests or (1000 if fast else 4000)
+    steps = steps or (150 if fast else 400)
+    max_batch = 256
+
+    data = train_test(3000, 800, seed=1)
+    res = train_jsc(JSC_S, steps=steps, batch=128, data=data)
+    net = to_logic(JSC_S, res.params, res.masks, res.bn_state)
+    (xte, _) = data[1]
+    xs = np.ascontiguousarray(
+        xte[np.arange(n_requests) % xte.shape[0]], np.float32)
+
+    engines = {b: LogicEngine(net, JSC_S.n_classes, max_batch=max_batch,
+                              backend=b) for b in backends}
+    direct = {b: engines[b].classify(xs) for b in backends}
+
+    # legacy sequential reference (gather = the seed's default backend)
+    base_eng = engines.get("gather") or next(iter(engines.values()))
+    call_us = measure_sequential_us(base_eng, xs)
+    capacity_qps = n_requests / (call_us.sum() * 1e-6)
+    offered = qps or 8 * capacity_qps
+    arrivals = poisson_arrivals_us(n_requests, offered, seed)
+    base = replay_busy_server(arrivals, call_us)
+    base["service_p95_us"] = float(np.percentile(call_us, 95))
+    base["service_mean_us"] = float(call_us.mean())
+    base["capacity_qps"] = capacity_qps
+
+    out: Dict = {"n_requests": n_requests, "offered_qps": round(offered, 1),
+                 "train_steps": steps, "seed": seed,
+                 "baseline_sequential": base, "backends": {}}
+    for b in backends:
+        executor = engines[b].scheduler_executor()
+        if n_replicas > 1:              # independent data-parallel engines
+            executor = build_logic_replicas(
+                net, JSC_S.n_classes, n_replicas=n_replicas, backend=b,
+                max_batch=max_batch, policy="least_loaded")
+        rec: Dict = {}
+        if loadgen in ("open", "both"):
+            got, snap = run_open_loop(executor, xs, offered, seed=seed,
+                                      max_batch=max_batch)
+            rec["open_loop"] = _snap_row(snap)
+            rec["open_loop"]["identical_to_classify"] = bool(
+                np.array_equal(got, direct[b]))
+            rec["open_loop"]["throughput_x_sequential"] = round(
+                snap["qps"] / base["qps"], 2) if base["qps"] else 0.0
+        if loadgen in ("closed", "both"):
+            got, snap = run_closed_loop(executor, xs, max_batch=max_batch)
+            rec["closed_loop"] = _snap_row(snap)
+            rec["closed_loop"]["identical_to_classify"] = bool(
+                np.array_equal(got, direct[b]))
+        out["backends"][b] = rec
+    out["argmax_identical_across_backends"] = bool(all(
+        np.array_equal(direct[b], direct[backends[0]]) for b in backends))
+
+    if write_json:
+        path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+        with open(path, "w") as f:
+            json.dump({"section": "serve", "results": out}, f, indent=1)
+        print(f"[loadgen] wrote {path}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--qps", type=float, default=None,
+                    help="offered open-loop rate (default: 8x sequential)")
+    ap.add_argument("--backends", default=",".join(BACKENDS))
+    ap.add_argument("--loadgen", choices=["open", "closed", "both"],
+                    default="both")
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    out = run(fast=args.fast, backends=tuple(args.backends.split(",")),
+              n_requests=args.requests, qps=args.qps, loadgen=args.loadgen,
+              n_replicas=args.replicas, steps=args.steps, seed=args.seed)
+    base = out["baseline_sequential"]
+    print(f"[loadgen] sequential baseline: {base['qps']:.0f} qps "
+          f"p95={base['p95_us']:.0f}us")
+    for b, rec in out["backends"].items():
+        for mode, r in rec.items():
+            print(f"[loadgen] {b}/{mode}: {r['qps']:.0f} qps "
+                  f"p50={r['p50_us']:.0f}us p95={r['p95_us']:.0f}us "
+                  f"p99={r['p99_us']:.0f}us occ={r['mean_batch_occupancy']:.2f} "
+                  f"identical={r['identical_to_classify']}")
+
+
+if __name__ == "__main__":
+    main()

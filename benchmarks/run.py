@@ -10,6 +10,7 @@ the repo root so the perf trajectory is tracked across PRs.
   latency  — logic path vs dense float vs XNOR, µs/call
   ablation — activation-selection + FCP-schedule ablations
   kernels  — Pallas kernel microbenchmarks vs oracles
+  serve    — repro.serve scheduler loadgen vs legacy sequential serving
   roofline — dry-run derived roofline table (if results exist)
 """
 from __future__ import annotations
@@ -46,7 +47,8 @@ def _write_bench_json(all_results: dict) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,latency,ablation,kernels,roofline")
+                    help="comma list: table1,latency,ablation,kernels,"
+                         "serve,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="fewer training steps (CI mode)")
     args = ap.parse_args()
@@ -96,6 +98,24 @@ def main() -> None:
         all_results["kernels"] = res
         for k, v in res.items():
             _emit(f"kernels/{k}", v, "interpret-mode")
+
+    if want("serve"):
+        from benchmarks import loadgen
+        res = loadgen.run(fast=args.fast, write_json=False)
+        all_results["serve"] = res
+        base = res["baseline_sequential"]
+        _emit("serve/sequential", base["p95_us"],
+              f"qps={base['qps']:.0f};p50={base['p50_us']:.0f}us;"
+              f"service_p95={base['service_p95_us']:.0f}us")
+        for b, rec in res["backends"].items():
+            for mode, r in rec.items():
+                _emit(f"serve/{b}/{mode}", r["p95_us"],
+                      f"qps={r['qps']:.0f};p50={r['p50_us']:.0f}us;"
+                      f"p99={r['p99_us']:.0f}us;"
+                      f"occ={r['mean_batch_occupancy']:.2f};"
+                      f"identical={r['identical_to_classify']}"
+                      + (f";speedup={r['throughput_x_sequential']}x"
+                         if "throughput_x_sequential" in r else ""))
 
     if want("roofline"):
         from benchmarks import roofline

@@ -3,6 +3,10 @@
   # paper's product: compiled fixed-function logic serving
   PYTHONPATH=src python -m repro.launch.serve --mode logic --jsc jsc-s
 
+  # async micro-batching scheduler with 2 replicas under open-loop load
+  PYTHONPATH=src python -m repro.launch.serve --mode logic --sched \
+      --replicas 2 --loadgen open --qps 20000 --backend bitplane
+
   # continuous-batching LM decode on a smoke config
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch glm4-9b \
       --smoke --requests 8
@@ -10,6 +14,8 @@
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -17,9 +23,15 @@ import numpy as np
 
 from repro.configs import get_arch
 
+# benchmarks/ lives at the repo root, one level above src/
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
 
 def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
-                use_pallas: bool, backend: str = "gather"):
+                use_pallas: bool, backend: str = "gather",
+                sched: bool = False, replicas: int = 1,
+                qps: float = None, loadgen: str = None):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -40,6 +52,44 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         print(f"  mapped: {eng.bitnet.mapped.n_luts} LUTs, "
               f"depth {eng.bitnet.mapped.depth}")
     (_, _), (xte, yte) = train_test()
+
+    if loadgen:                         # full benchmark harness
+        if _REPO_ROOT not in sys.path:
+            sys.path.insert(0, _REPO_ROOT)
+        from benchmarks import loadgen as lg
+        out = lg.run(fast=True, backends=(backend,), n_requests=n_requests,
+                     qps=qps, loadgen=loadgen, n_replicas=replicas,
+                     steps=train_steps)
+        rec = out["backends"][backend]
+        mode = "open_loop" if "open_loop" in rec else "closed_loop"
+        print(f"[serve] {mode}: {rec[mode]['qps']:.0f} qps "
+              f"p95={rec[mode]['p95_us']:.1f}us "
+              f"occ={rec[mode]['mean_batch_occupancy']:.2f}")
+        return rec
+
+    if sched:                           # scheduler + replica dispatch
+        from repro.serve import (MicroBatchScheduler, SchedConfig,
+                                 build_logic_replicas)
+        executor = eng.scheduler_executor()
+        if replicas > 1:                # independent data-parallel engines
+            executor = build_logic_replicas(
+                net, cfg.n_classes, n_replicas=replicas, backend=backend,
+                max_batch=eng.max_batch, policy="least_loaded")
+        s = MicroBatchScheduler(
+            executor, SchedConfig(max_batch=eng.max_batch,
+                                  max_queue=4 * n_requests * 64)).start()
+        futs = [s.submit(xte[i % xte.shape[0]])
+                for i in range(n_requests * 64)]
+        s.stop(drain=True)
+        got = np.array([int(f.result(timeout=30)) for f in futs], np.int32)
+        acc = float(np.mean(got == yte[np.arange(len(got)) % yte.shape[0]]))
+        snap = s.metrics.snapshot()
+        print(f"[serve] sched x{replicas}: {len(futs)} requests "
+              f"acc={acc:.4f} p50={snap['p50_us']:.1f}us "
+              f"p95={snap['p95_us']:.1f}us qps={snap['qps']:.0f} "
+              f"occ={snap['mean_batch_occupancy']:.2f}")
+        return snap
+
     reqs = [xte[i * 64: (i + 1) * 64] for i in range(n_requests)]
     results, stats = eng.serve_queue(reqs)
     acc = float(np.mean(np.concatenate(results)
@@ -82,10 +132,24 @@ def main(argv=None):
     ap.add_argument("--backend", choices=["gather", "pallas", "bitplane"],
                     default="gather",
                     help="logic inference path (bitplane = mapped netlist)")
+    ap.add_argument("--sched", action="store_true",
+                    help="serve through the repro.serve micro-batch "
+                         "scheduler instead of the blocking loop")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind the "
+                         "scheduler (least-loaded dispatch)")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="offered open-loop arrival rate for --loadgen")
+    ap.add_argument("--loadgen", choices=["open", "closed", "both"],
+                    default=None,
+                    help="drive the scheduler with the benchmarks/"
+                         "loadgen.py harness and report p50/p95/p99+QPS")
     args = ap.parse_args(argv)
     if args.mode == "logic":
         serve_logic(args.jsc, args.train_steps, args.requests, args.pallas,
-                    backend=args.backend)
+                    backend=args.backend, sched=args.sched,
+                    replicas=args.replicas, qps=args.qps,
+                    loadgen=args.loadgen)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)
 

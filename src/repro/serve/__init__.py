@@ -1,0 +1,33 @@
+"""repro.serve — async micro-batching serving substrate.
+
+The throughput layer over the paper's fixed-function logic inference:
+
+  sched     — event-driven micro-batch scheduler (injectable clock,
+              deadline/size flush, priority lanes, typed backpressure);
+  aggregate — bitplane request aggregation: 32 concurrent requests per
+              uint32 lane through one ``repro.synth`` netlist eval;
+  replica   — round-robin / least-loaded dispatch with failover over
+              data-parallel replicas placed via ``repro.dist``;
+  metrics   — enqueue→complete latency histograms, queue depth, batch
+              occupancy and QPS;
+  clock     — SystemClock / FakeClock so the whole engine is
+              deterministic under test.
+
+``benchmarks/loadgen.py`` drives the stack end-to-end (open-loop
+Poisson + closed-loop) and writes ``BENCH_serve.json``.
+"""
+from .aggregate import BitplaneAggregator
+from .clock import FakeClock, SystemClock
+from .metrics import LatencyHistogram, ServeMetrics
+from .replica import (AllReplicasDown, ReplicaSet, build_logic_replicas,
+                      mesh_placed)
+from .sched import (BoundedPriorityQueue, MicroBatchScheduler, RejectReason,
+                    RequestRejected, SchedConfig, ServeFuture, ServeRequest)
+
+__all__ = [
+    "BitplaneAggregator", "FakeClock", "SystemClock", "LatencyHistogram",
+    "ServeMetrics", "AllReplicasDown", "ReplicaSet", "build_logic_replicas",
+    "mesh_placed", "BoundedPriorityQueue", "MicroBatchScheduler",
+    "RejectReason", "RequestRejected", "SchedConfig", "ServeFuture",
+    "ServeRequest",
+]

@@ -1,0 +1,153 @@
+"""Serving metrics: latency histograms, queue depth, occupancy, QPS.
+
+``ServeMetrics`` is the one object every scheduler/engine records into;
+``snapshot()`` is the one dict every benchmark and launcher reports.
+Latencies are enqueue→complete (the number a client actually sees),
+never bare execution time — hiding head-of-line queueing is exactly the
+bug the legacy ``serve_queue`` stats had.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# log-spaced histogram bucket edges: 0.1 µs .. ~100 s, 10 buckets/decade
+_BUCKET_LO_US = 0.1
+_BUCKETS_PER_DECADE = 10
+_N_BUCKETS = 9 * _BUCKETS_PER_DECADE + 1
+
+
+def _bucket_of(us: float) -> int:
+    if us <= _BUCKET_LO_US:
+        return 0
+    b = int(math.log10(us / _BUCKET_LO_US) * _BUCKETS_PER_DECADE)
+    return min(b, _N_BUCKETS - 1)
+
+
+class LatencyHistogram:
+    """Log-bucketed latency histogram with exact-sample percentiles.
+
+    Bucket counts give a bounded-memory view for dashboards; raw samples
+    (bounded reservoir) keep p50/p95/p99 exact at benchmark scale.
+    """
+
+    def __init__(self, max_samples: int = 200_000):
+        self.counts = np.zeros(_N_BUCKETS, np.int64)
+        self.samples: List[float] = []
+        self.max_samples = max_samples
+        self.n = 0
+        self.total_us = 0.0
+
+    def record(self, us: float) -> None:
+        self.counts[_bucket_of(us)] += 1
+        self.n += 1
+        self.total_us += us
+        if len(self.samples) < self.max_samples:
+            self.samples.append(us)
+        else:  # reservoir: deterministic stride keep (no RNG in hot path)
+            i = self.n % self.max_samples
+            self.samples[i] = us
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self.samples), p))
+
+    def mean(self) -> float:
+        return self.total_us / self.n if self.n else 0.0
+
+    def buckets(self) -> Dict[str, int]:
+        """Non-empty buckets keyed by their lower edge (µs)."""
+        out = {}
+        for b in np.nonzero(self.counts)[0]:
+            lo = _BUCKET_LO_US * 10 ** (b / _BUCKETS_PER_DECADE)
+            out[f"{lo:.3g}us"] = int(self.counts[b])
+        return out
+
+
+@dataclasses.dataclass
+class BatchStat:
+    rows: int
+    occupancy: float
+    exec_us: float
+
+
+class ServeMetrics:
+    """Thread-safe accumulator for one scheduler (or engine) lifetime."""
+
+    def __init__(self, max_batch: int = 0):
+        self.max_batch = max_batch
+        self.lat = LatencyHistogram()
+        self.batches: List[BatchStat] = []
+        self.completed = 0
+        self.rejected: Dict[str, int] = {}
+        self.errors = 0
+        self.queue_depth_sum = 0
+        self.queue_depth_n = 0
+        self.max_queue_depth = 0
+        self.t_first_enqueue_us: Optional[float] = None
+        self.t_last_done_us: Optional[float] = None
+        self._lock = threading.Lock()
+
+    # -- recording ---------------------------------------------------------
+    def record_enqueue(self, depth: int, now_us: float) -> None:
+        with self._lock:
+            self.queue_depth_sum += depth
+            self.queue_depth_n += 1
+            self.max_queue_depth = max(self.max_queue_depth, depth)
+            if self.t_first_enqueue_us is None:
+                self.t_first_enqueue_us = now_us
+
+    def record_reject(self, reason: str) -> None:
+        with self._lock:
+            self.rejected[reason] = self.rejected.get(reason, 0) + 1
+
+    def record_batch(self, rows: int, exec_us: float) -> None:
+        occ = rows / self.max_batch if self.max_batch else 1.0
+        with self._lock:
+            self.batches.append(BatchStat(rows, occ, exec_us))
+
+    def record_done(self, latency_us: float, now_us: float) -> None:
+        with self._lock:
+            self.lat.record(latency_us)
+            self.completed += 1
+            self.t_last_done_us = now_us
+
+    def record_error(self, n_requests: int = 1) -> None:
+        with self._lock:
+            self.errors += n_requests
+
+    # -- reporting ---------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            span_us = 0.0
+            if (self.t_first_enqueue_us is not None
+                    and self.t_last_done_us is not None):
+                span_us = self.t_last_done_us - self.t_first_enqueue_us
+            occ = [b.occupancy for b in self.batches]
+            rows = [b.rows for b in self.batches]
+            return {
+                "completed": self.completed,
+                "rejected": int(sum(self.rejected.values())),
+                "rejected_by_reason": dict(self.rejected),
+                "errors": self.errors,
+                "p50_us": self.lat.percentile(50),
+                "p95_us": self.lat.percentile(95),
+                "p99_us": self.lat.percentile(99),
+                "mean_us": self.lat.mean(),
+                "qps": (self.completed / (span_us * 1e-6)
+                        if span_us > 0 else 0.0),
+                "span_us": span_us,
+                "n_batches": len(self.batches),
+                "mean_batch_rows": float(np.mean(rows)) if rows else 0.0,
+                "mean_batch_occupancy": float(np.mean(occ)) if occ else 0.0,
+                "mean_queue_depth": (self.queue_depth_sum
+                                     / self.queue_depth_n
+                                     if self.queue_depth_n else 0.0),
+                "max_queue_depth": self.max_queue_depth,
+                "latency_buckets": self.lat.buckets(),
+            }

@@ -1,0 +1,139 @@
+"""N-replica dispatch: round-robin / least-loaded over engine replicas.
+
+A ``ReplicaSet`` is itself a scheduler executor — it picks a healthy
+replica per batch, retries the batch on the next replica when one
+raises (failover), and only surfaces an error once every replica is
+down. Replicas are data-parallel copies of the serving function; when a
+``repro.dist`` mesh is active their input batches are placed through
+``dist.shardings.batch_shardings`` so the same partitioning rules that
+lay out training batches lay out serving batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+class AllReplicasDown(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Replica:
+    fn: Callable[[np.ndarray], np.ndarray]
+    rid: int
+    healthy: bool = True
+    inflight: int = 0
+    served: int = 0
+    failures: int = 0
+
+
+class ReplicaSet:
+    """Dispatch policy over replica callables (``policy``: ``"rr"`` |
+    ``"least_loaded"``)."""
+
+    def __init__(self, fns: Sequence[Callable], policy: str = "rr"):
+        if policy not in ("rr", "least_loaded"):
+            raise ValueError(f"unknown dispatch policy {policy!r}")
+        assert len(fns) >= 1
+        self.replicas = [Replica(fn=f, rid=i) for i, f in enumerate(fns)]
+        self.policy = policy
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    def _pick(self) -> Optional[Replica]:
+        with self._lock:
+            healthy = [r for r in self.replicas if r.healthy]
+            if not healthy:
+                return None
+            if self.policy == "least_loaded":
+                r = min(healthy, key=lambda r: (r.inflight, r.rid))
+            else:
+                r = healthy[self._rr % len(healthy)]
+                self._rr += 1
+            r.inflight += 1
+            return r
+
+    def mark_down(self, rid: int) -> None:
+        with self._lock:
+            self.replicas[rid].healthy = False
+
+    def mark_up(self, rid: int) -> None:
+        with self._lock:
+            self.replicas[rid].healthy = True
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        """Run one batch with failover: a raising replica is marked down
+        and the batch retried elsewhere."""
+        last_exc: Optional[BaseException] = None
+        for _ in range(len(self.replicas)):
+            r = self._pick()
+            if r is None:
+                break
+            try:
+                out = r.fn(x)
+                with self._lock:
+                    r.inflight -= 1
+                    r.served += 1
+                return out
+            except Exception as e:
+                last_exc = e
+                with self._lock:
+                    r.inflight -= 1
+                    r.failures += 1
+                    r.healthy = False
+        raise AllReplicasDown(
+            f"no healthy replica left (of {len(self.replicas)})"
+        ) from last_exc
+
+    def stats(self) -> List[dict]:
+        with self._lock:
+            return [{"rid": r.rid, "healthy": r.healthy, "served": r.served,
+                     "failures": r.failures, "inflight": r.inflight}
+                    for r in self.replicas]
+
+
+# ---------------------------------------------------------------------------
+# dist-placed logic-engine replicas
+# ---------------------------------------------------------------------------
+
+def mesh_placed(fn: Callable, mesh) -> Callable:
+    """Wrap an executor so its batch is device_put with the repro.dist
+    batch partitioning rules before evaluation (no-op without a mesh)."""
+    if mesh is None:
+        return fn
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist import shardings
+
+    def placed(x: np.ndarray) -> np.ndarray:
+        arr = jnp.asarray(x)
+        sh = shardings.batch_shardings(
+            mesh, jax.ShapeDtypeStruct(arr.shape, arr.dtype))
+        return np.asarray(fn(jax.device_put(arr, sh)))
+
+    return placed
+
+
+def build_logic_replicas(net, n_classes: int, n_replicas: int = 1,
+                         backend: str = "gather", max_batch: int = 256,
+                         policy: str = "rr", mesh=None) -> ReplicaSet:
+    """Data-parallel ``LogicEngine`` replicas behind one dispatch point.
+
+    Each replica owns its own engine (own jit cache / synthesized
+    netlist); with a mesh active, batches route through the
+    ``repro.dist`` sharding rules on their way in.
+    """
+    from repro.serving.engine import LogicEngine
+
+    fns = []
+    for _ in range(n_replicas):
+        eng = LogicEngine(net, n_classes, max_batch=max_batch,
+                          backend=backend)
+        fns.append(mesh_placed(eng.scheduler_executor(), mesh))
+    return ReplicaSet(fns, policy=policy)

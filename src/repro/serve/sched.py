@@ -1,0 +1,342 @@
+"""Event-driven micro-batch scheduler with an injectable clock.
+
+The core is a deterministic discrete-event engine: ``submit`` enqueues
+into bounded priority lanes (typed reject on overflow), ``poll`` forms
+and executes batches — flush when ``max_batch`` rows are waiting or the
+oldest request has aged past ``max_wait_us``, whichever comes first.
+Nothing inside reads wall time except through the injected clock, so a
+``FakeClock`` test steps the exact same code path production runs.
+
+Two drivers sit on top of the core:
+  * synchronous — ``poll``/``drain`` called by the owner (tests, the
+    ``serve_queue`` compatibility wrapper, simulated loadgen);
+  * threaded — ``start()`` spawns a flush loop that sleeps until the
+    next deadline and wakes on submit (real-time open-loop serving).
+
+The executor contract is one callable ``(B, ...) -> (B,)``: it receives
+the concatenated rows of every request in the batch and returns one
+result row per input row. ``repro.serve.aggregate.BitplaneAggregator``
+and ``repro.serve.replica.ReplicaSet`` both satisfy it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Callable, Deque, List, Optional, Sequence
+
+import numpy as np
+
+from .clock import SystemClock
+from .metrics import ServeMetrics
+
+# ---------------------------------------------------------------------------
+# Futures + typed rejection
+# ---------------------------------------------------------------------------
+
+
+class RejectReason:
+    QUEUE_FULL = "queue_full"
+    SHUTDOWN = "shutdown"
+    TOO_LARGE = "too_large"
+    BAD_PRIORITY = "bad_priority"
+
+
+class RequestRejected(RuntimeError):
+    """Admission-control reject; ``reason`` is a ``RejectReason`` value."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"request rejected ({reason}){': ' if detail else ''}"
+                         f"{detail}")
+        self.reason = reason
+
+
+class ServeFuture:
+    """Thread-safe single-assignment result slot for one request."""
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self.t_enqueue_us: float = 0.0
+        self.t_done_us: float = 0.0
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def set_result(self, value) -> None:
+        self._result = value
+        self._ev.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._ev.set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError("request still pending")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    @property
+    def latency_us(self) -> float:
+        return self.t_done_us - self.t_enqueue_us
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    x: object                   # (rows, ...) payload (or an LMRequest)
+    rows: int
+    priority: int
+    t_enqueue_us: float
+    future: ServeFuture
+
+
+# ---------------------------------------------------------------------------
+# Bounded priority lanes (shared with LMEngine admission)
+# ---------------------------------------------------------------------------
+
+class BoundedPriorityQueue:
+    """FIFO-within-lane priority queue with bounded total occupancy.
+
+    Lane 0 is the highest priority. ``push`` raises ``RequestRejected``
+    instead of blocking — backpressure is the caller's signal to shed
+    load, the serving analogue of the paper's fixed-capacity fabric.
+    """
+
+    def __init__(self, max_queue: int, n_priorities: int = 2):
+        assert n_priorities >= 1
+        self.max_queue = max_queue
+        self.lanes: List[Deque[ServeRequest]] = [
+            deque() for _ in range(n_priorities)]
+        self._len = 0
+        self._rows = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    @property
+    def rows(self) -> int:
+        return self._rows
+
+    def push(self, req: ServeRequest) -> None:
+        if not 0 <= req.priority < len(self.lanes):
+            raise RequestRejected(
+                RejectReason.BAD_PRIORITY,
+                f"priority {req.priority} not in [0, {len(self.lanes)})")
+        if self._len >= self.max_queue:
+            raise RequestRejected(
+                RejectReason.QUEUE_FULL,
+                f"{self._len} requests already queued (max {self.max_queue})")
+        self.lanes[req.priority].append(req)
+        self._len += 1
+        self._rows += req.rows
+
+    def oldest_enqueue_us(self) -> Optional[float]:
+        ts = [lane[0].t_enqueue_us for lane in self.lanes if lane]
+        return min(ts) if ts else None
+
+    def pop_batch(self, max_rows: int) -> List[ServeRequest]:
+        """Highest-priority-first batch of whole requests, up to
+        ``max_rows`` total rows; stops at the first head-of-line request
+        that does not fit (no within-lane reordering)."""
+        out: List[ServeRequest] = []
+        rows = 0
+        for lane in self.lanes:
+            while lane and rows + lane[0].rows <= max_rows:
+                req = lane.popleft()
+                out.append(req)
+                rows += req.rows
+                self._len -= 1
+                self._rows -= req.rows
+            if lane and out and rows + lane[0].rows > max_rows:
+                break
+        return out
+
+    def pop_all(self) -> List[ServeRequest]:
+        out: List[ServeRequest] = []
+        for lane in self.lanes:
+            out.extend(lane)
+            lane.clear()
+        self._len = 0
+        self._rows = 0
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SchedConfig:
+    max_batch: int = 256          # flush at this many rows ...
+    max_wait_us: float = 200.0    # ... or when the oldest waits this long
+    max_queue: int = 4096         # admission bound, in requests
+    n_priorities: int = 2
+
+
+class MicroBatchScheduler:
+    """Deadline-based micro-batching over an executor callable.
+
+    ``executor(x_batch) -> results`` is called with the row-concatenated
+    payloads of a batch; results are scattered back to each request's
+    future, stamped with true enqueue→complete latency.
+    """
+
+    def __init__(self, executor: Callable[[np.ndarray], Sequence],
+                 cfg: Optional[SchedConfig] = None, clock=None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.executor = executor
+        self.cfg = cfg or SchedConfig()
+        self.clock = clock or SystemClock()
+        self.metrics = metrics or ServeMetrics(max_batch=self.cfg.max_batch)
+        self.queue = BoundedPriorityQueue(self.cfg.max_queue,
+                                          self.cfg.n_priorities)
+        self._cond = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+        self._shutdown = False
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, x, priority: int = 0) -> ServeFuture:
+        """Admit one request (a single sample or a (B, ...) row block).
+
+        Raises ``RequestRejected`` — typed, never blocks — when the
+        queue is full, the payload exceeds one batch, or the scheduler
+        is shut down.
+        """
+        x = np.asarray(x)
+        rows = 1 if x.ndim <= 1 else x.shape[0]
+        if rows > self.cfg.max_batch:
+            self.metrics.record_reject(RejectReason.TOO_LARGE)
+            raise RequestRejected(
+                RejectReason.TOO_LARGE,
+                f"{rows} rows > max_batch {self.cfg.max_batch}")
+        fut = ServeFuture()
+        now = self.clock.now_us()
+        fut.t_enqueue_us = now
+        req = ServeRequest(x=x, rows=rows, priority=priority,
+                           t_enqueue_us=now, future=fut)
+        with self._cond:
+            if self._shutdown:
+                self.metrics.record_reject(RejectReason.SHUTDOWN)
+                raise RequestRejected(RejectReason.SHUTDOWN)
+            try:
+                self.queue.push(req)
+            except RequestRejected as e:
+                self.metrics.record_reject(e.reason)
+                raise
+            self.metrics.record_enqueue(len(self.queue), now)
+            self._cond.notify_all()
+        return fut
+
+    # -- event engine ------------------------------------------------------
+    def next_deadline_us(self) -> Optional[float]:
+        """When the oldest queued request must flush (None if idle)."""
+        with self._cond:
+            oldest = self.queue.oldest_enqueue_us()
+        if oldest is None:
+            return None
+        return oldest + self.cfg.max_wait_us
+
+    def _due_batch(self, now_us: float,
+                   force: bool) -> List[ServeRequest]:
+        with self._cond:
+            if len(self.queue) == 0:
+                return []
+            full = self.queue.rows >= self.cfg.max_batch
+            oldest = self.queue.oldest_enqueue_us()
+            aged = oldest is not None and (
+                now_us - oldest >= self.cfg.max_wait_us)
+            if not (full or aged or force):
+                return []
+            return self.queue.pop_batch(self.cfg.max_batch)
+
+    def _run_batch(self, batch: List[ServeRequest]) -> None:
+        rows = sum(r.rows for r in batch)
+        xs = [r.x if r.x.ndim > 1 else r.x[None] for r in batch]
+        xcat = np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
+        t0 = self.clock.now_us()
+        try:
+            res = self.executor(xcat)
+        except Exception as e:              # fail the whole batch, keep serving
+            now = self.clock.now_us()
+            self.metrics.record_error(len(batch))
+            for r in batch:
+                r.future.t_done_us = now
+                r.future.set_exception(e)
+            return
+        now = self.clock.now_us()
+        self.metrics.record_batch(rows, now - t0)
+        res = np.asarray(res)
+        assert res.shape[0] == rows, (
+            f"executor returned {res.shape[0]} rows for a {rows}-row batch")
+        off = 0
+        for r in batch:
+            out = res[off: off + r.rows]
+            off += r.rows
+            r.future.t_done_us = now
+            self.metrics.record_done(now - r.t_enqueue_us, now)
+            r.future.set_result(out[0] if r.x.ndim <= 1 else out)
+
+    def poll(self, now_us: Optional[float] = None, force: bool = False) -> int:
+        """Run every batch due at ``now_us`` (clock-now if omitted);
+        ``force`` flushes regardless of deadlines. Returns requests
+        resolved — completed or failed with the executor's error."""
+        done = 0
+        while True:
+            now = self.clock.now_us() if now_us is None else now_us
+            batch = self._due_batch(now, force)
+            if not batch:
+                return done
+            self._run_batch(batch)
+            done += len(batch)
+
+    def drain(self) -> int:
+        """Synchronously flush everything queued (partial batches too)."""
+        return self.poll(force=True)
+
+    def pending(self) -> int:
+        with self._cond:
+            return len(self.queue)
+
+    # -- threaded driver ---------------------------------------------------
+    def start(self) -> "MicroBatchScheduler":
+        assert self._thread is None, "scheduler already started"
+        self._stopping = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="microbatch-sched")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while (not self._stopping and len(self.queue) == 0):
+                    self._cond.wait(timeout=0.05)
+                if self._stopping and len(self.queue) == 0:
+                    return
+                now = self.clock.now_us()
+                full = self.queue.rows >= self.cfg.max_batch
+                oldest = self.queue.oldest_enqueue_us()
+                wait_us = (0.0 if full or oldest is None or self._stopping
+                           else (oldest + self.cfg.max_wait_us) - now)
+                if wait_us > 0:
+                    self._cond.wait(timeout=wait_us * 1e-6)
+                    continue
+            self.poll(force=self._stopping)
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the driver thread; by default flush what is queued first,
+        then reject all further submissions."""
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        if drain:
+            self.drain()
+        with self._cond:
+            self._shutdown = True

@@ -1,1 +1,6 @@
-"""Serving substrate: batched request engine for logic networks + LMs."""
+"""Serving substrate: batched request engine for logic networks + LMs.
+
+Both engines sit behind the ``repro.serve`` micro-batching scheduler:
+``LogicEngine.serve_queue`` wraps it for request batching, and
+``LMEngine`` admission uses its bounded priority queue.
+"""

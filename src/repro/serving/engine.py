@@ -13,10 +13,8 @@ Two request kinds, matching the paper's deployment story:
 from __future__ import annotations
 
 import dataclasses
-import queue
-import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +53,13 @@ class LogicEngine:
         if self.use_pallas and self.backend == "gather":
             self.backend = "pallas"
         if self.backend == "bitplane":
+            from repro.serve.aggregate import BitplaneAggregator
             from repro.synth import compile_logic_network
             self.bitnet = compile_logic_network(
                 self.net, effort=self.synth_effort)
-            self._fn = lambda x: self.bitnet.classify(x, self.n_classes)
+            # padded aggregator: one quantizer shape for every flush size
+            self._fn = BitplaneAggregator(self.bitnet, self.n_classes,
+                                          pad_rows=self.max_batch)
             return
         if self.backend not in ("gather", "pallas"):
             raise ValueError(f"unknown LogicEngine backend {self.backend!r}")
@@ -70,34 +71,78 @@ class LogicEngine:
         # warm the jit cache at the serving batch size
         self._fn(jnp.zeros((self.max_batch, self.net.n_inputs), jnp.float32))
 
+    def exec_batch(self, x: np.ndarray) -> np.ndarray:
+        """One evaluation: (B <= max_batch, F) -> (B,) int32 argmax.
+
+        The jit backends pad to the warmed ``max_batch`` shape; the
+        bitplane backend packs exactly the rows it is given.
+        """
+        x = np.asarray(x)
+        n = x.shape[0]
+        assert n <= self.max_batch, (n, self.max_batch)
+        if self.backend == "bitplane":
+            return np.asarray(self._fn(x))
+        pad = self.max_batch - n
+        if pad:
+            x = np.concatenate([x, np.zeros((pad, x.shape[1]), x.dtype)])
+        return np.asarray(self._fn(jnp.asarray(x)))[:n]
+
     def classify(self, x: np.ndarray) -> np.ndarray:
         """Synchronous batched classification."""
         n = x.shape[0]
         out = np.empty((n,), np.int32)
         for i in range(0, n, self.max_batch):
             xb = x[i: i + self.max_batch]
-            pad = self.max_batch - xb.shape[0]
-            if pad:
-                xb = np.concatenate([xb, np.zeros((pad, x.shape[1]),
-                                                  x.dtype)])
-            res = np.asarray(self._fn(jnp.asarray(xb)))
-            out[i: i + self.max_batch - pad] = res[: self.max_batch - pad]
+            out[i: i + xb.shape[0]] = self.exec_batch(xb)
         return out
 
-    def serve_queue(self, requests: List[np.ndarray]
+    def scheduler_executor(self) -> Callable[[np.ndarray], np.ndarray]:
+        """Executor callable for ``repro.serve`` schedulers.
+
+        The bitplane backend aggregates the batch's requests into uint32
+        lanes and evaluates the mapped netlist once per pack
+        (``repro.serve.aggregate``); the jit backends run one padded
+        evaluation. All three return identical argmaxes.
+        """
+        if self.backend == "bitplane":
+            return self._fn
+        return self.exec_batch
+
+    def serve_queue(self, requests: List[np.ndarray], clock=None
                     ) -> Tuple[List[np.ndarray], Dict[str, float]]:
         """Micro-batched serving of a request list; returns per-request
-        results + latency stats (p50/p95/mean, µs)."""
-        lat = []
-        results = []
+        results + latency stats (p50/p95/p99/mean, µs).
+
+        Thin compatibility wrapper over ``repro.serve``'s micro-batch
+        scheduler: all requests are admitted up front and drained, so
+        the reported latencies are true enqueue→complete times — a
+        request stuck behind earlier batches shows its head-of-line
+        wait, which the old per-call timing loop hid.
+        """
+        from repro.serve import MicroBatchScheduler, SchedConfig
+
+        cfg = SchedConfig(max_batch=self.max_batch,
+                          max_wait_us=self.max_wait_ms * 1e3,
+                          max_queue=max(2 * len(requests), 1),
+                          n_priorities=1)
+        sched = MicroBatchScheduler(self.scheduler_executor(), cfg,
+                                    clock=clock)
+        futs: List[Any] = []
         for r in requests:
-            t0 = time.perf_counter()
-            results.append(self.classify(r))
-            lat.append((time.perf_counter() - t0) * 1e6)
-        lat_np = np.asarray(lat)
-        stats = {"p50_us": float(np.percentile(lat_np, 50)),
-                 "p95_us": float(np.percentile(lat_np, 95)),
-                 "mean_us": float(lat_np.mean())}
+            r = np.asarray(r)
+            if r.ndim > 1 and r.shape[0] > self.max_batch:
+                futs.append([sched.submit(r[i: i + self.max_batch])
+                             for i in range(0, r.shape[0], self.max_batch)])
+            else:
+                futs.append(sched.submit(r))
+        sched.drain()
+        results = [np.concatenate([np.asarray(p.result()) for p in f])
+                   if isinstance(f, list) else np.asarray(f.result())
+                   for f in futs]
+        snap = sched.metrics.snapshot()
+        stats = {k: snap[k] for k in
+                 ("p50_us", "p95_us", "p99_us", "mean_us", "qps",
+                  "mean_batch_occupancy", "n_batches")}
         return results, stats
 
 
@@ -113,6 +158,9 @@ class LMRequest:
     out_tokens: Optional[List[int]] = None
 
 
+_LM_CACHE_LEAVES = ("k", "v", "positions", "ssm", "conv", "enc_out")
+
+
 class LMEngine:
     """Continuous-batching decode over a fixed slot pool.
 
@@ -120,10 +168,18 @@ class LMEngine:
     every active slot each tick (inactive slots carry a pad token, their
     outputs are discarded) — the standard TPU serving shape where the
     decode batch is static and occupancy varies.
+
+    Admission sits behind the ``repro.serve`` bounded priority queue:
+    ``submit`` enqueues with a priority lane and raises a typed
+    ``RequestRejected`` when ``max_pending`` is hit (backpressure),
+    and freed slots always admit the highest-priority waiter first.
     """
 
     def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
-                 max_seq: int = 512):
+                 max_seq: int = 512, max_pending: Optional[int] = None,
+                 n_priorities: int = 2):
+        from repro.serve.sched import BoundedPriorityQueue
+
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -135,6 +191,55 @@ class LMEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
         self._prefill_cache = {}
+        self._splice = jax.jit(self._splice_slot, donate_argnums=(0,))
+        self.admission = BoundedPriorityQueue(
+            max_pending if max_pending is not None else (1 << 30),
+            n_priorities)
+
+    def submit(self, req: LMRequest, priority: int = 0):
+        """Admit into the priority queue (typed reject when full).
+
+        Returns the request's ``ServeFuture``: resolved with the
+        finished ``LMRequest`` by ``run``, with enqueue→complete
+        latency on ``fut.latency_us``.
+        """
+        from repro.serve.sched import ServeFuture, ServeRequest
+
+        fut = ServeFuture()
+        fut.t_enqueue_us = time.perf_counter() * 1e6
+        self.admission.push(ServeRequest(
+            x=req, rows=1, priority=priority,
+            t_enqueue_us=fut.t_enqueue_us, future=fut))
+        return fut
+
+    @staticmethod
+    def _splice_slot(cache, single, slot):
+        """Write ONE admitted slot into the pooled cache.
+
+        Runs jitted with the pool donated, so every leaf updates in
+        place — O(layers × window) writes for the admitted slot only,
+        where the old two-step ``.at[...].set`` path materialised two
+        full-pool copies per leaf (O(layers × slots) device traffic per
+        admission).
+        """
+        out = {}
+        for key, pool in cache.items():
+            s = single[key]
+            if key in ("k", "v"):            # (L, B, W, KV, dh)
+                w = min(s.shape[2], pool.shape[2])
+                row = jnp.zeros(pool.shape[:1] + pool.shape[2:], pool.dtype)
+                row = row.at[:, :w].set(s[:, 0, :w])
+                out[key] = pool.at[:, slot].set(row)
+            elif key == "positions":          # (B, W)
+                w = min(s.shape[1], pool.shape[1])
+                row = jnp.full(pool.shape[1:], -1, pool.dtype)
+                row = row.at[:w].set(s[0, :w])
+                out[key] = pool.at[slot].set(row)
+            elif key in ("ssm", "conv"):      # (L, B, ...)
+                out[key] = pool.at[:, slot].set(s[:, 0])
+            else:                             # enc_out (B, F, D)
+                out[key] = pool.at[slot].set(s[0])
+        return out
 
     def _admit(self, req: LMRequest, slot: int):
         # per-request prefill at its prompt length (compile cache per len)
@@ -146,40 +251,36 @@ class LMEngine:
                                         max_seq=self.max_seq))
         logits, cache1 = self._prefill_cache[s](self.params, toks)
 
-        # splice slot state into the pooled cache (key-aware; ring slot
-        # layouts agree because prompt_len <= pool window here)
-        new_cache = dict(self.cache)
-        for key, single in cache1.items():
-            pool = self.cache[key]
-            if key in ("k", "v"):            # (L, B, W, KV, dh)
-                w = min(single.shape[2], pool.shape[2])
-                reset = pool.at[:, slot].set(0)
-                new_cache[key] = reset.at[:, slot, :w].set(single[:, 0, :w])
-            elif key == "positions":          # (B, W)
-                w = min(single.shape[1], pool.shape[1])
-                reset = pool.at[slot].set(-1)
-                new_cache[key] = reset.at[slot, :w].set(single[0, :w])
-            elif key in ("ssm", "conv"):      # (L, B, ...)
-                new_cache[key] = pool.at[:, slot].set(single[:, 0])
-            elif key == "enc_out":            # (B, F, D)
-                new_cache[key] = pool.at[slot].set(single[0])
-            else:
+        for key in cache1:
+            if key not in _LM_CACHE_LEAVES:
                 raise KeyError(f"unknown cache leaf {key}")
-        self.cache = new_cache
+        # splice only the admitted slot (ring slot layouts agree because
+        # prompt_len <= pool window here)
+        self.cache = self._splice(self.cache, cache1,
+                                  jnp.asarray(slot, jnp.int32))
         req.out_tokens = []
         self.active[slot] = req
         self.positions[slot] = s
         self.last_tok[slot, 0] = int(jnp.argmax(logits[0]))
         req.out_tokens.append(int(self.last_tok[slot, 0]))
 
-    def run(self, requests: List[LMRequest]) -> List[LMRequest]:
-        pending = list(requests)
+    def run(self, requests: Sequence[LMRequest] = ()) -> List[LMRequest]:
+        """Decode until the admission queue and all slots are empty.
+
+        ``requests`` (back-compat) are submitted at priority 0 before
+        the loop; callers using ``submit`` directly can pass nothing.
+        """
+        for r in requests:
+            self.submit(r)
         done: List[LMRequest] = []
-        while pending or any(a is not None for a in self.active):
-            # admit
+        sreqs: List[Optional[Any]] = [None] * self.n_slots
+        while len(self.admission) or any(a is not None for a in self.active):
+            # admit, highest priority lane first
             for i in range(self.n_slots):
-                if self.active[i] is None and pending:
-                    self._admit(pending.pop(0), i)
+                if self.active[i] is None and len(self.admission):
+                    (sreq,) = self.admission.pop_batch(1)
+                    sreqs[i] = sreq
+                    self._admit(sreq.x, i)
             # decode tick
             logits, self.cache = self._decode(
                 self.params, self.cache,
@@ -198,4 +299,8 @@ class LMEngine:
                         or self.positions[i] >= self.max_seq - 1):
                     done.append(req)
                     self.active[i] = None
+                    if sreqs[i] is not None:
+                        sreqs[i].future.t_done_us = time.perf_counter() * 1e6
+                        sreqs[i].future.set_result(req)
+                        sreqs[i] = None
         return done

@@ -1,0 +1,317 @@
+"""repro.serve: scheduler semantics under a fake clock, backpressure,
+priority lanes, replica failover, bitplane aggregation, and cross-backend
+bit-identity of scheduled results on JSC-S."""
+import numpy as np
+import pytest
+
+from repro.serve import (AllReplicasDown, BitplaneAggregator, FakeClock,
+                         MicroBatchScheduler, RejectReason, ReplicaSet,
+                         RequestRejected, SchedConfig)
+from repro.serve.sched import BoundedPriorityQueue, ServeFuture, ServeRequest
+
+
+def _sum_executor(log):
+    def ex(x):
+        log.append(x.shape[0])
+        return x.sum(axis=-1)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# Batch formation: deadline flush vs full-batch flush
+# ---------------------------------------------------------------------------
+
+def test_full_batch_flushes_without_deadline():
+    clk, log = FakeClock(), []
+    s = MicroBatchScheduler(_sum_executor(log),
+                            SchedConfig(max_batch=4, max_wait_us=1e6),
+                            clock=clk)
+    futs = [s.submit(np.full((3,), i, np.float32)) for i in range(4)]
+    # four 1-row requests = max_batch: flush immediately, no time passed
+    assert s.poll() == 4
+    assert log == [4]
+    assert [f.result(0) for f in futs] == [0.0, 3.0, 6.0, 9.0]
+
+
+def test_deadline_flush_partial_batch():
+    clk, log = FakeClock(), []
+    s = MicroBatchScheduler(_sum_executor(log),
+                            SchedConfig(max_batch=64, max_wait_us=200.0),
+                            clock=clk)
+    f = s.submit(np.ones((2, 3), np.float32))
+    assert s.poll() == 0                 # under max_batch, deadline not hit
+    clk.advance_us(199.0)
+    assert s.poll() == 0                 # 1 us early
+    clk.advance_us(1.0)
+    assert s.poll() == 1                 # exactly at max_wait_us
+    assert log == [2]
+    np.testing.assert_allclose(f.result(0), [3.0, 3.0])
+    assert f.latency_us == 200.0         # true enqueue->complete time
+
+
+def test_multirow_requests_never_split_and_fill_batches():
+    clk, log = FakeClock(), []
+    s = MicroBatchScheduler(_sum_executor(log),
+                            SchedConfig(max_batch=4, max_wait_us=10.0),
+                            clock=clk)
+    fa = s.submit(np.ones((3, 2)))
+    fb = s.submit(np.ones((2, 2)))       # does not fit with fa: 5 > 4
+    clk.advance_us(11.0)
+    assert s.poll() == 2                 # two batches, FIFO preserved
+    assert log == [3, 2]
+    assert fa.result(0).shape == (3,) and fb.result(0).shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# Admission control / backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_typed_reject():
+    s = MicroBatchScheduler(_sum_executor([]),
+                            SchedConfig(max_batch=8, max_queue=3),
+                            clock=FakeClock())
+    for _ in range(3):
+        s.submit(np.ones(2))
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones(2))
+    assert e.value.reason == RejectReason.QUEUE_FULL
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones((9, 2)))        # more rows than one batch
+    assert e.value.reason == RejectReason.TOO_LARGE
+    snap = s.metrics.snapshot()
+    assert snap["rejected"] == 2
+    assert snap["rejected_by_reason"] == {"queue_full": 1, "too_large": 1}
+    assert s.drain() == 3                # queued work still completes
+
+
+def test_shutdown_rejects_new_submissions():
+    s = MicroBatchScheduler(_sum_executor([]), SchedConfig(),
+                            clock=FakeClock())
+    s.start()
+    s.stop(drain=True)
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones(2))
+    assert e.value.reason == RejectReason.SHUTDOWN
+
+
+# ---------------------------------------------------------------------------
+# Priority lanes
+# ---------------------------------------------------------------------------
+
+def test_priority_ordering_within_flush():
+    clk, order = FakeClock(), []
+
+    def ex(x):
+        order.extend(int(v) for v in x[:, 0])
+        return x[:, 0]
+
+    s = MicroBatchScheduler(ex, SchedConfig(max_batch=2, max_wait_us=10.0,
+                                            n_priorities=2), clock=clk)
+    lo = s.submit(np.full((1, 1), 9.0), priority=1)
+    hi = [s.submit(np.full((1, 1), float(i)), priority=0) for i in range(3)]
+    clk.advance_us(11.0)
+    s.poll()
+    # lane 0 drains FIFO first; the lone low-priority request flushes last
+    assert order == [0, 1, 2, 9]
+    assert lo.result(0) == 9.0 and hi[0].result(0) == 0.0
+
+
+def test_bad_priority_rejected():
+    s = MicroBatchScheduler(_sum_executor([]),
+                            SchedConfig(n_priorities=2), clock=FakeClock())
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones(2), priority=5)
+    assert e.value.reason == RejectReason.BAD_PRIORITY
+
+
+def test_bounded_priority_queue_is_lm_admission_core():
+    q = BoundedPriorityQueue(max_queue=2, n_priorities=3)
+
+    def req(p):
+        return ServeRequest(x=None, rows=1, priority=p, t_enqueue_us=0.0,
+                            future=ServeFuture())
+
+    q.push(req(2))
+    q.push(req(0))
+    with pytest.raises(RequestRejected) as e:
+        q.push(req(1))
+    assert e.value.reason == RejectReason.QUEUE_FULL
+    (first,) = q.pop_batch(1)
+    assert first.priority == 0           # freed slot admits high lane first
+
+
+# ---------------------------------------------------------------------------
+# Executor failure + replica failover
+# ---------------------------------------------------------------------------
+
+def test_executor_error_fails_batch_not_scheduler():
+    clk = FakeClock()
+    calls = []
+
+    def flaky(x):
+        calls.append(x.shape[0])
+        if len(calls) == 1:
+            raise RuntimeError("boom")
+        return x.sum(axis=-1)
+
+    s = MicroBatchScheduler(flaky, SchedConfig(max_batch=2), clock=clk)
+    bad = [s.submit(np.ones(2)) for _ in range(2)]
+    assert s.poll() == 2                 # resolved, but with the error set
+    for f in bad:
+        with pytest.raises(RuntimeError):
+            f.result(0)
+    good = [s.submit(np.ones(2)) for _ in range(2)]
+    s.poll()
+    assert [f.result(0) for f in good] == [2.0, 2.0]
+    assert s.metrics.snapshot()["errors"] == 2
+
+
+def test_replica_failover_marks_down_and_retries():
+    down = {"n": 0}
+
+    def bad(x):
+        down["n"] += 1
+        raise RuntimeError("replica crash")
+
+    rs = ReplicaSet([bad, lambda x: x.sum(axis=-1)], policy="rr")
+    np.testing.assert_allclose(rs(np.ones((2, 3))), [3.0, 3.0])
+    assert down["n"] == 1
+    rs(np.ones((1, 3)))                  # dead replica skipped, not retried
+    assert down["n"] == 1
+    stats = rs.stats()
+    assert [r["healthy"] for r in stats] == [False, True]
+    assert stats[1]["served"] == 2 and stats[0]["failures"] == 1
+
+
+def test_all_replicas_down_raises_through_scheduler():
+    def bad(x):
+        raise RuntimeError("dead")
+
+    rs = ReplicaSet([bad, bad])
+    s = MicroBatchScheduler(rs, SchedConfig(max_batch=1), clock=FakeClock())
+    f = s.submit(np.ones(2))
+    s.poll()
+    with pytest.raises(AllReplicasDown):
+        f.result(0)
+
+
+def test_least_loaded_prefers_idle_replica():
+    rs = ReplicaSet([lambda x: x, lambda x: x], policy="least_loaded")
+    rs.replicas[0].inflight = 3          # simulate a busy replica
+    picked = rs._pick()
+    assert picked.rid == 1
+    rs.replicas[1].inflight -= 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduled serving on JSC-S: all backends, bit-identical to classify
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def jsc_small():
+    from repro.configs.jsc import JSC_S
+    from repro.data.jsc import train_test
+    from repro.models.mlp import to_logic
+    from repro.train.jsc_trainer import train_jsc
+    data = train_test(2000, 400, seed=2)
+    res = train_jsc(JSC_S, steps=120, batch=128, data=data)
+    net = to_logic(JSC_S, res.params, res.masks, res.bn_state)
+    return net, data[1][0]
+
+
+@pytest.mark.parametrize("backend", ["gather", "pallas", "bitplane"])
+def test_scheduled_matches_direct_classify(jsc_small, backend):
+    from repro.serving.engine import LogicEngine
+    net, xte = jsc_small
+    eng = LogicEngine(net, 5, max_batch=64, backend=backend)
+    want = eng.classify(xte[:96])
+    clk = FakeClock()
+    s = MicroBatchScheduler(eng.scheduler_executor(),
+                            SchedConfig(max_batch=64, max_wait_us=100.0,
+                                        max_queue=200), clock=clk)
+    futs = [s.submit(xte[i]) for i in range(96)]   # single-sample requests
+    assert s.drain() == 96
+    got = np.array([int(f.result(0)) for f in futs], np.int32)
+    np.testing.assert_array_equal(got, want)
+    snap = s.metrics.snapshot()
+    assert snap["n_batches"] == 2                  # 96 rows / max_batch 64
+    assert snap["mean_batch_occupancy"] == pytest.approx(0.75)
+
+
+def test_bitplane_aggregator_packs_requests_into_lanes(jsc_small):
+    from repro.serving.engine import LogicEngine
+    net, xte = jsc_small
+    eng = LogicEngine(net, 5, max_batch=64, backend="bitplane")
+    agg = BitplaneAggregator(eng.bitnet, 5)
+    got = agg(xte[:40])
+    np.testing.assert_array_equal(got, eng.classify(xte[:40]))
+    # 40 requests -> 2 lane-words per input wire (32 + 8 lanes)
+    n_wires = net.n_inputs * eng.bitnet.in_bits
+    assert agg.pack_requests(xte[:40]).shape == (n_wires, 2)
+    assert agg.mean_lane_occupancy == pytest.approx(40 / 64)
+
+
+def test_serve_queue_wrapper_reports_true_latency(jsc_small):
+    from repro.serving.engine import LogicEngine
+    net, xte = jsc_small
+    eng = LogicEngine(net, 5, max_batch=64, backend="gather")
+    reqs = [xte[i * 32: (i + 1) * 32] for i in range(4)]
+    results, stats = eng.serve_queue(reqs)
+    assert len(results) == 4
+    np.testing.assert_array_equal(np.concatenate(results),
+                                  eng.classify(xte[:128]))
+    for key in ("p50_us", "p95_us", "p99_us", "mean_us", "qps",
+                "mean_batch_occupancy"):
+        assert key in stats
+    assert stats["p95_us"] >= stats["p50_us"] > 0.0
+
+
+def test_threaded_driver_end_to_end(jsc_small):
+    from repro.serving.engine import LogicEngine
+    net, xte = jsc_small
+    eng = LogicEngine(net, 5, max_batch=64, backend="gather")
+    s = MicroBatchScheduler(eng.scheduler_executor(),
+                            SchedConfig(max_batch=64, max_wait_us=500.0,
+                                        max_queue=400)).start()
+    futs = [s.submit(xte[i]) for i in range(200)]
+    got = np.array([int(f.result(timeout=30)) for f in futs], np.int32)
+    s.stop(drain=True)
+    np.testing.assert_array_equal(got, eng.classify(xte[:200]))
+    assert s.metrics.snapshot()["completed"] == 200
+
+
+# ---------------------------------------------------------------------------
+# LM admission behind the scheduler queue
+# ---------------------------------------------------------------------------
+
+def test_lm_engine_admission_backpressure_and_priority():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import lm
+    from repro.serving.engine import LMEngine, LMRequest
+
+    cfg = get_arch("glm4-9b", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = LMEngine(cfg, params, n_slots=1, max_seq=32, max_pending=2)
+    rng = np.random.default_rng(0)
+
+    def req():
+        return LMRequest(prompt=rng.integers(0, cfg.vocab_size, 4,
+                                             dtype=np.int32),
+                         max_new_tokens=2)
+
+    lo, hi = req(), req()
+    lo_fut = eng.submit(lo, priority=1)
+    hi_fut = eng.submit(hi, priority=0)
+    with pytest.raises(RequestRejected) as e:
+        eng.submit(req())
+    assert e.value.reason == RejectReason.QUEUE_FULL
+    done = eng.run()
+    assert len(done) == 2
+    # single slot: the high-priority request must have been admitted first
+    assert done[0] is hi and done[1] is lo
+    assert all(len(r.out_tokens) == 2 for r in done)
+    # the futures resolve to the finished requests with real latencies
+    assert hi_fut.result(0) is hi and lo_fut.result(0) is lo
+    assert lo_fut.latency_us >= hi_fut.latency_us > 0.0
