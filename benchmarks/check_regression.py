@@ -1,0 +1,230 @@
+"""CI benchmark-regression gate.
+
+Diffs freshly written ``BENCH_<section>.json`` files against committed
+baselines and fails when any shared metric regresses past the
+tolerance. Baselines default to the versions at git ``HEAD`` — in CI
+that is the checked-out commit, i.e. the files *before* the smoke
+benchmark steps overwrote them, so no copy step is needed.
+
+Direction-aware comparison:
+  * lower-is-better (µs latencies): fail when
+    ``fresh > baseline * (1 + tolerance)``;
+  * higher-is-better (qps, speedup ratios): fail when
+    ``fresh < baseline / (1 + tolerance)``.
+
+Two measures keep the gate honest across machines (a CI runner is not
+the dev box that committed the baseline):
+
+  * **Load-amplified metrics are excluded.** Open-loop queueing
+    latencies explode non-linearly with the offered-rate/capacity
+    ratio, which is machine-relative — a no-op commit on a slower
+    runner can show 30x p95. Open-loop records contribute only their
+    throughput metrics (qps and the machine-normalized
+    ``throughput_x_sequential``); closed-loop and sequential-baseline
+    latencies, which scale ~linearly with machine speed, stay in.
+  * **Median drift normalization.** Per file, the median ratio across
+    shared metrics estimates the uniform machine-speed factor; each
+    metric is judged on its residual from that median (clamped to
+    ``--max-drift`` so a genuine across-the-board regression bigger
+    than the clamp still fails). ``--no-normalize`` compares raw
+    ratios.
+
+Metrics present on only one side are reported but never fail the gate
+(smoke runs cover a subset of the full benchmark matrix, and new
+kernels add rows the old baseline lacks). Sub-floor latencies
+(``--min-us``) are skipped: timer noise dominates there.
+
+  python benchmarks/check_regression.py                  # HEAD baselines
+  python benchmarks/check_regression.py --tolerance 0.5  # looser gate
+  python benchmarks/check_regression.py --baseline-dir /tmp/base
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from statistics import median
+from typing import Dict, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ("BENCH_kernels.json", "BENCH_serve.json")
+
+LOWER, HIGHER = "lower", "higher"        # which direction is better
+
+_LAT_KEYS = (("p50_us", LOWER), ("p95_us", LOWER), ("p99_us", LOWER),
+             ("mean_us", LOWER))
+_THROUGHPUT_KEYS = (("qps", HIGHER), ("throughput_x_sequential", HIGHER))
+
+
+def load_baseline(name: str, baseline_dir: Optional[str]) -> Optional[dict]:
+    """Baseline JSON from a directory, or from the committed tree at
+    git HEAD when no directory is given."""
+    if baseline_dir:
+        path = os.path.join(baseline_dir, name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{name}"], cwd=REPO_ROOT,
+            capture_output=True, check=True).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, json.JSONDecodeError,
+            FileNotFoundError):
+        return None
+
+
+def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
+    """Flatten a BENCH json into {metric_name: (value, direction)}.
+
+    Works on both writers: ``benchmarks/run.py`` (rows + results) and
+    ``benchmarks/loadgen.py`` (results only) — serve metrics always come
+    from ``results`` so the two formats share keys."""
+    out: Dict[str, Tuple[float, str]] = {}
+    section = doc.get("section", "?")
+    res = doc.get("results") or {}
+    if section == "serve":
+        base = res.get("baseline_sequential") or {}
+        keys = _LAT_KEYS + _THROUGHPUT_KEYS + (
+            ("service_p95_us", LOWER), ("service_mean_us", LOWER))
+        for key, direction in keys:
+            if key in base:
+                out[f"serve/sequential/{key}"] = (float(base[key]), direction)
+        for b, rec in (res.get("backends") or {}).items():
+            for mode, r in rec.items():
+                if not isinstance(r, dict):
+                    continue
+                # open-loop latencies are queueing at a machine-relative
+                # offered rate — load-amplified, not comparable across
+                # machines (see module docstring)
+                keys = (_THROUGHPUT_KEYS if mode == "open_loop"
+                        else _LAT_KEYS + _THROUGHPUT_KEYS)
+                for key, direction in keys:
+                    if key in r:
+                        out[f"serve/{b}/{mode}/{key}"] = (
+                            float(r[key]), direction)
+    elif isinstance(res, dict) and res:
+        for k, v in res.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f"{section}/{k}"] = (float(v), LOWER)
+    else:                                   # generic fallback: CSV rows
+        for row in doc.get("rows") or []:
+            out[row["name"]] = (float(row["us_per_call"]), LOWER)
+    return out
+
+
+def compare(base: Dict[str, Tuple[float, str]],
+            fresh: Dict[str, Tuple[float, str]],
+            tolerance: float, min_us: float,
+            normalize: bool = True, max_drift: float = 3.0):
+    """Returns (regressions, checked, only_one_side, drift).
+
+    ``checked`` rows are (name, base, fresh, raw_ratio, residual,
+    direction); a row regresses when its drift-normalized residual
+    exceeds 1 + tolerance. ``residual`` is oriented so that > 1 always
+    means "worse", whichever direction the metric prefers."""
+    effective: Dict[str, float] = {}
+    rows = []
+    for name in sorted(set(base) | set(fresh)):
+        if name not in base or name not in fresh:
+            rows.append((name, None))
+            continue
+        bv, direction = base[name]
+        fv = fresh[name][0]
+        if direction == LOWER and max(bv, fv) < min_us:
+            continue                         # sub-floor: timer noise
+        if bv <= 0 or fv <= 0:
+            continue
+        ratio = fv / bv
+        effective[name] = ratio if direction == LOWER else 1.0 / ratio
+        rows.append((name, (bv, fv, ratio, direction)))
+
+    drift = 1.0
+    if normalize and len(effective) >= 3:    # too few metrics to estimate
+        drift = median(effective.values())
+        drift = min(max(drift, 1.0 / max_drift), max_drift)
+
+    regressions, checked, only_one = [], [], []
+    for name, payload in rows:
+        if payload is None:
+            only_one.append(name)
+            continue
+        bv, fv, ratio, direction = payload
+        residual = effective[name] / drift
+        row = (name, bv, fv, ratio, residual, direction)
+        checked.append(row)
+        if residual > 1.0 + tolerance:
+            regressions.append(row)
+    return regressions, checked, only_one, drift
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when fresh benchmark JSONs regress past "
+                    "tolerance vs committed baselines")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative slowdown after drift "
+                         "normalization (0.25 = 25%%)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip latency metrics where both sides are "
+                         "below this (timer noise)")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="compare raw ratios (no median machine-speed "
+                         "drift correction)")
+    ap.add_argument("--max-drift", type=float, default=3.0,
+                    help="clamp for the drift estimate: an "
+                         "across-the-board slowdown beyond this still "
+                         "fails")
+    ap.add_argument("--files", default=",".join(DEFAULT_FILES),
+                    help="comma list of BENCH json names")
+    ap.add_argument("--fresh-dir", default=REPO_ROOT,
+                    help="directory holding the freshly written JSONs")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="baseline directory (default: git show HEAD:)")
+    args = ap.parse_args(argv)
+
+    any_regression = False
+    any_checked = False
+    for name in args.files.split(","):
+        name = name.strip()
+        fresh_path = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            print(f"[regress] {name}: no fresh file — skipped")
+            continue
+        with open(fresh_path) as f:
+            fresh_doc = json.load(f)
+        base_doc = load_baseline(name, args.baseline_dir)
+        if base_doc is None:
+            print(f"[regress] {name}: no baseline — skipped "
+                  f"(new benchmark file?)")
+            continue
+        regs, checked, only_one, drift = compare(
+            extract_metrics(base_doc), extract_metrics(fresh_doc),
+            args.tolerance, args.min_us,
+            normalize=not args.no_normalize, max_drift=args.max_drift)
+        any_checked = any_checked or bool(checked)
+        print(f"[regress] {name}: {len(checked)} metrics checked "
+              f"(drift x{drift:.2f}), {len(only_one)} one-sided "
+              f"(ignored), {len(regs)} regression(s) at tolerance "
+              f"{args.tolerance:.0%}")
+        for row in checked:
+            mname, bv, fv, ratio, residual, direction = row
+            flag = "  REGRESSION" if row in regs else ""
+            print(f"  {mname}: {bv:.1f} -> {fv:.1f} (x{ratio:.2f} raw, "
+                  f"x{residual:.2f} vs drift, {direction} better){flag}")
+        if regs:
+            any_regression = True
+    if not any_checked:
+        print("[regress] WARNING: no overlapping metrics found anywhere")
+    if any_regression:
+        print("[regress] FAIL: benchmark regression(s) past tolerance")
+        return 1
+    print("[regress] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

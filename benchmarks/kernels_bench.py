@@ -57,6 +57,44 @@ def run() -> Dict:
         lambda w: aig_sim(np.asarray(w).view(np.uint32), f0, f1, n_vars),
         words, iters=3)
 
+    # lut_eval: whole mapped-netlist execution, 8k samples — the bitplane
+    # Shannon fold (numpy host / jnp scan oracle / Pallas kernel) vs the
+    # per-sample table-gather path on the same netlist
+    from repro.kernels.lut_eval import lut_eval, lut_eval_gather_ref, lut_eval_ref
+    from repro.synth import compile_device_plan, synthesize
+    from repro.synth.executor import _compile_plan, execute_packed
+    from repro.synth.simulate import unpack_bits
+    n_vars = 10
+    aig2 = AIG(n_vars)
+    aig2.outputs = [
+        table_to_aig(aig2, rng.random(1 << n_vars) < 0.5, None,
+                     [2 * (i + 1) for i in range(n_vars)])
+        for _ in range(4)]
+    mapped = synthesize(aig2)
+    plan = _compile_plan(mapped)
+    dp = compile_device_plan(mapped, plan)
+    lwords = rng.integers(0, 1 << 32, (n_vars, 256), dtype=np.uint32)
+    out["lut_eval_numpy_us"] = _t(
+        lambda w: execute_packed(mapped, w, plan=plan), lwords)
+    flat_leaf = jnp.asarray(dp.leaf_idx.reshape(-1, dp.k), jnp.int32)
+    flat_tt = jnp.asarray(np.ascontiguousarray(
+        dp.tt_bits.reshape(-1, 1 << dp.k)).view(np.int32))
+    flat_ow = jnp.asarray(dp.out_wires.reshape(-1), jnp.int32)
+    out["lut_eval_ref_us"] = _t(
+        jax.jit(lambda w: lut_eval_ref(w, flat_leaf, flat_tt, flat_ow,
+                                       dp.n_pis, dp.n_wires)),
+        jnp.asarray(lwords.view(np.int32)))
+    out["lut_eval_pallas_us"] = _t(
+        lambda w: lut_eval(w, dp.leaf_idx, dp.tt_bits, dp.out_wires,
+                           n_pis=dp.n_pis, n_wires=dp.n_wires),
+        lwords, iters=3)
+    lbits = jnp.asarray(unpack_bits(lwords, 256 * 32), jnp.int32)
+    tt01 = jnp.asarray((dp.tt_bits & 1).astype(np.int32))
+    li, ow = jnp.asarray(dp.leaf_idx), jnp.asarray(dp.out_wires)
+    out["lut_eval_gather_us"] = _t(
+        jax.jit(lambda b: lut_eval_gather_ref(b, li, tt01, ow,
+                                              dp.n_pis, dp.n_wires)), lbits)
+
     # xnor: 256x4096 @ 4096x256
     from repro.kernels.xnor_popcount import (pack_bipolar, xnor_matmul,
                                              xnor_matmul_ref)

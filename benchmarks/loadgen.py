@@ -1,8 +1,9 @@
 """Load-generator harness for the ``repro.serve`` scheduler.
 
-Drives the micro-batching scheduler end-to-end on JSC-S across all
-three ``LogicEngine`` backends and writes ``BENCH_serve.json`` at the
-repo root:
+Drives the micro-batching scheduler end-to-end on JSC-S across the
+``LogicEngine`` backends (``bitplane-pallas`` = mapped netlist on the
+``kernels/lut_eval`` device executor) and writes ``BENCH_serve.json``
+at the repo root:
 
   * open-loop   — seeded Poisson arrivals at an offered QPS, submitted
     in real time into a thread-driven scheduler (the arrival process
@@ -31,7 +32,20 @@ import numpy as np
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-BACKENDS = ("gather", "pallas", "bitplane")
+BACKENDS = ("gather", "pallas", "bitplane", "bitplane-pallas")
+
+
+def parse_backend(spec: str, engine: str = "numpy"):
+    """Backend spec -> (LogicEngine backend, bitplane engine).
+
+    ``"bitplane-pallas"`` pins the bitplane backend to the on-device
+    ``kernels.lut_eval`` executor regardless of ``--engine``; plain
+    ``"bitplane"`` uses ``engine`` (default numpy host fold)."""
+    if spec == "bitplane-pallas":
+        return "bitplane", "pallas"
+    if spec == "bitplane":
+        return "bitplane", engine
+    return spec, "numpy"
 
 
 # ---------------------------------------------------------------------------
@@ -174,7 +188,8 @@ def _snap_row(snap: Dict) -> Dict[str, float]:
 def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
         n_requests: Optional[int] = None, qps: Optional[float] = None,
         loadgen: str = "both", n_replicas: int = 1, steps: Optional[int] = None,
-        seed: int = 0, write_json: bool = True) -> Dict:
+        seed: int = 0, write_json: bool = True,
+        engine: str = "numpy") -> Dict:
     """Train JSC-S once, then loadgen every backend through the
     scheduler; returns (and optionally writes) the BENCH_serve record."""
     from repro.configs.jsc import JSC_S
@@ -195,8 +210,10 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
     xs = np.ascontiguousarray(
         xte[np.arange(n_requests) % xte.shape[0]], np.float32)
 
+    resolved = {b: parse_backend(b, engine) for b in backends}
     engines = {b: LogicEngine(net, JSC_S.n_classes, max_batch=max_batch,
-                              backend=b) for b in backends}
+                              backend=be, engine=en)
+               for b, (be, en) in resolved.items()}
     direct = {b: engines[b].classify(xs) for b in backends}
 
     # legacy sequential reference (gather = the seed's default backend)
@@ -214,12 +231,13 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
                  "train_steps": steps, "seed": seed,
                  "baseline_sequential": base, "backends": {}}
     for b in backends:
+        be, en = resolved[b]
         executor = engines[b].scheduler_executor()
         if n_replicas > 1:              # independent data-parallel engines
             executor = build_logic_replicas(
-                net, JSC_S.n_classes, n_replicas=n_replicas, backend=b,
-                max_batch=max_batch, policy="least_loaded")
-        rec: Dict = {}
+                net, JSC_S.n_classes, n_replicas=n_replicas, backend=be,
+                max_batch=max_batch, policy="least_loaded", engine=en)
+        rec: Dict = {"engine": en} if be == "bitplane" else {}
         if loadgen in ("open", "both"):
             got, snap = run_open_loop(executor, xs, offered, seed=seed,
                                       max_batch=max_batch)
@@ -257,15 +275,21 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=["numpy", "pallas"], default="numpy",
+                    help="bitplane netlist executor (host fold or the "
+                         "kernels/lut_eval on-device pipeline)")
     args = ap.parse_args(argv)
     out = run(fast=args.fast, backends=tuple(args.backends.split(",")),
               n_requests=args.requests, qps=args.qps, loadgen=args.loadgen,
-              n_replicas=args.replicas, steps=args.steps, seed=args.seed)
+              n_replicas=args.replicas, steps=args.steps, seed=args.seed,
+              engine=args.engine)
     base = out["baseline_sequential"]
     print(f"[loadgen] sequential baseline: {base['qps']:.0f} qps "
           f"p95={base['p95_us']:.0f}us")
     for b, rec in out["backends"].items():
         for mode, r in rec.items():
+            if not isinstance(r, dict):     # per-backend metadata (engine)
+                continue
             print(f"[loadgen] {b}/{mode}: {r['qps']:.0f} qps "
                   f"p50={r['p50_us']:.0f}us p95={r['p95_us']:.0f}us "
                   f"p99={r['p99_us']:.0f}us occ={r['mean_batch_occupancy']:.2f} "

@@ -109,6 +109,8 @@ def main() -> None:
               f"service_p95={base['service_p95_us']:.0f}us")
         for b, rec in res["backends"].items():
             for mode, r in rec.items():
+                if not isinstance(r, dict):  # per-backend metadata (engine)
+                    continue
                 _emit(f"serve/{b}/{mode}", r["p95_us"],
                       f"qps={r['qps']:.0f};p50={r['p50_us']:.0f}us;"
                       f"p99={r['p99_us']:.0f}us;"

@@ -5,6 +5,12 @@
   xnor_popcount — bit-packed bipolar (±1) matmul via XNOR + popcount,
                   the binary-QAT inference/training forward primitive.
   fanin_matmul  — fanin-K gather-matmul for FCP-sparse linear layers.
+  aig_sim       — bit-parallel AIG simulation: the node walk of the
+                  synthesis-time equivalence checker run on-chip.
+  lut_eval      — whole mapped-netlist execution: the levelized,
+                  width-padded k-LUT plan evaluated as Shannon-cofactor
+                  folds over a VMEM-resident wire plane (the serving
+                  path of ``BitplaneNetwork(engine="pallas")``).
   flash_attention — online-softmax attention (VMEM-tiled), the LM-side
                   hot-spot at 32k+ contexts (GQA via grouped heads).
 

@@ -1,0 +1,86 @@
+"""Pallas kernel: whole-netlist evaluation of a mapped k-LUT network.
+
+The mapped netlist, levelized and padded to a uniform level width
+(``repro.synth.executor.compile_device_plan``), is a linear program of
+LUT evaluations: slot i gathers its k leaf planes from a dense wire
+buffer and folds its 2^k-entry INIT vector over them Shannon-cofactor
+style (k select steps, each one AND/ANDN/OR over the whole word tile).
+Because every leaf of a LUT lives on a strictly earlier level, the
+level-major slot walk is a topological order and a single ``fori_loop``
+evaluates the entire network with the wire plane resident in VMEM as
+the kernel's output block.
+
+Layout mirrors ``kernels/aig_sim``: words pack 32 samples per int32
+lane, the grid tiles the word (sample) axis, leaf/output wire indices
+sit in SMEM so the per-slot address arithmetic is scalar, and the INIT
+masks (row r = 0 or ~0 for truth-table bit r) are a VMEM-resident
+(n_slots, 2^k) table loaded one row per slot. Padded slots read the
+constant-0 wire and write a dump row one past the last real wire, so
+the loop body is branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BW = 128   # word (packed-sample) tile, lane-aligned
+
+
+def _kernel(leaf_ref, ow_ref, tt_ref, pis_ref, out_ref, *,
+            n_pis: int, n_slots: int, k: int):
+    bw = pis_ref.shape[1]
+    n_tt = tt_ref.shape[1]
+    out_ref[0, :] = jnp.zeros((bw,), jnp.int32)          # const-0 row
+    out_ref[1: n_pis + 1, :] = pis_ref[...]
+
+    def body(i, carry):
+        # INIT masks for slot i, broadcast over the word tile
+        tt = pl.load(tt_ref, (pl.ds(i, 1), slice(None)))         # (1, n_tt)
+        state = jnp.broadcast_to(tt.reshape(n_tt, 1), (n_tt, bw))
+        size = n_tt
+        for j in range(k - 1, -1, -1):   # static unroll: Shannon fold
+            half = size // 2
+            sel = pl.load(out_ref,
+                          (pl.ds(leaf_ref[i, j], 1), slice(None)))  # (1, bw)
+            state = (state[:half] & ~sel) | (state[half:size] & sel)
+            size = half
+        pl.store(out_ref, (pl.ds(ow_ref[i], 1), slice(None)), state)
+        return carry
+
+    jax.lax.fori_loop(0, n_slots, body, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_pis", "n_slots", "n_wires", "k", "block_w",
+                     "interpret"))
+def lut_eval_pallas(pi_words: jax.Array, leaf_idx: jax.Array,
+                    tt_bits: jax.Array, out_wires: jax.Array,
+                    n_pis: int, n_slots: int, n_wires: int, k: int,
+                    block_w: int = DEFAULT_BW,
+                    interpret: bool = True) -> jax.Array:
+    """pi_words: (n_pis, W) int32 packed samples; leaf_idx: (n_slots, k)
+    int32 wire indices; tt_bits: (n_slots, 2^k) int32 INIT masks;
+    out_wires: (n_slots,) int32 wire written per slot. Returns the full
+    wire plane (n_wires + 1, W) int32 — row 0 is const-0, rows
+    1..n_pis echo the inputs, row n_wires is the padded slots' dump."""
+    _, w = pi_words.shape
+    assert w % block_w == 0, (w, block_w)
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_pis=n_pis, n_slots=n_slots, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # leaf_idx
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # out_wires
+            pl.BlockSpec((n_slots, 1 << k), lambda i: (0, 0)),   # tt masks
+            pl.BlockSpec((n_pis, block_w), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n_wires + 1, block_w), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_wires + 1, w), jnp.int32),
+        interpret=interpret,
+    )(leaf_idx, out_wires, tt_bits, pi_words)

@@ -1,0 +1,57 @@
+"""Public jit'd wrapper for the lut_eval Pallas kernel (pads + unpads)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lut_eval import DEFAULT_BW, lut_eval_pallas
+
+
+def default_interpret() -> bool:
+    """Interpret on anything but a real TPU (same contract as aig_sim:
+    CPU CI runs the kernel through the Pallas interpreter, a TPU runs
+    the compiled Mosaic kernel)."""
+    return jax.default_backend() != "tpu"
+
+
+def lut_eval(pi_words: np.ndarray, leaf_idx: np.ndarray,
+             tt_bits: np.ndarray, out_wires: np.ndarray,
+             n_pis: int, n_wires: int,
+             interpret: Optional[bool] = None) -> np.ndarray:
+    """Evaluate a padded mapped-netlist plan on packed words; returns
+    the (n_wires + 1, W) uint32 wire plane (row n_wires is the padded
+    slots' dump row).
+
+    pi_words: (n_pis, W) uint32. Plan tensors may be level-stacked
+    ((n_levels, Lw, ...), as ``compile_device_plan`` builds them) or
+    already flattened to (n_slots, ...); level-major flattening is a
+    topological order, so both execute identically.
+    """
+    pi_words = np.ascontiguousarray(pi_words, np.uint32)
+    leaf_idx = np.ascontiguousarray(leaf_idx, np.int32).reshape(
+        -1, np.asarray(leaf_idx).shape[-1])
+    tt_bits = np.ascontiguousarray(tt_bits, np.uint32).reshape(
+        -1, np.asarray(tt_bits).shape[-1])
+    out_wires = np.ascontiguousarray(out_wires, np.int32).reshape(-1)
+    n_slots, k = leaf_idx.shape
+    w = pi_words.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
+    if n_slots == 0 or n_pis == 0 or w == 0:
+        vals = np.zeros((n_wires + 1, w), np.uint32)
+        vals[1: n_pis + 1] = pi_words
+        return vals
+    bw = min(DEFAULT_BW, max(1, w))
+    pad = (-w) % bw
+    if pad:
+        pi_words = np.concatenate(
+            [pi_words, np.zeros((n_pis, pad), np.uint32)], axis=1)
+    out = lut_eval_pallas(
+        jnp.asarray(pi_words.view(np.int32)), jnp.asarray(leaf_idx),
+        jnp.asarray(tt_bits.view(np.int32)), jnp.asarray(out_wires),
+        n_pis=n_pis, n_slots=n_slots, n_wires=n_wires, k=k,
+        block_w=bw, interpret=interpret)
+    return np.ascontiguousarray(np.asarray(out)[:, :w]).view(np.uint32)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the lut_eval kernel.
+
+``lut_eval_ref`` is the bitplane analogue of the kernel: a ``lax.scan``
+over the flattened slot list, each step gathering k leaf planes and
+folding the slot's INIT masks (the functional mirror of the kernel's
+in-place row stores). ``lut_eval_gather_ref`` is the *per-sample* path:
+unpacked bits, per level one select-index build and one table gather
+per slot row — the netlist equivalent of the gather inference backend,
+used as the baseline the bitplane fold is benchmarked against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_eval_ref(pi_words: jax.Array, leaf_idx: jax.Array,
+                 tt_bits: jax.Array, out_wires: jax.Array,
+                 n_pis: int, n_wires: int) -> jax.Array:
+    """pi_words: (n_pis, W) int32; leaf_idx: (n_slots, k) int32;
+    tt_bits: (n_slots, 2^k) int32 masks; out_wires: (n_slots,) int32.
+    Returns the (n_wires + 1, W) int32 wire plane."""
+    k = leaf_idx.shape[1]
+    n_tt = tt_bits.shape[1]
+    w = pi_words.shape[1]
+    vals = jnp.zeros((n_wires + 1, w), jnp.int32)
+    vals = vals.at[1: n_pis + 1].set(pi_words.astype(jnp.int32))
+
+    def step(vals, inp):
+        leaves, tt, ow = inp
+        ins = vals[leaves]                                  # (k, W)
+        state = jnp.broadcast_to(tt[:, None], (n_tt, w))
+        size = n_tt
+        for j in range(k - 1, -1, -1):
+            half = size // 2
+            sel = ins[j][None, :]
+            state = (state[:half] & ~sel) | (state[half:size] & sel)
+            size = half
+        return vals.at[ow].set(state[0]), None
+
+    vals, _ = jax.lax.scan(
+        step, vals, (leaf_idx.astype(jnp.int32), tt_bits.astype(jnp.int32),
+                     out_wires.astype(jnp.int32)))
+    return vals
+
+
+def lut_eval_gather_ref(pi_bits: jax.Array, leaf_idx: jax.Array,
+                        tt01: jax.Array, out_wires: jax.Array,
+                        n_pis: int, n_wires: int) -> jax.Array:
+    """Per-sample gather evaluation on *unpacked* bits.
+
+    pi_bits: (n_pis, B) int32 {0,1}; leaf_idx: (n_levels, Lw, k);
+    tt01: (n_levels, Lw, 2^k) int32 {0,1} truth-table bits;
+    out_wires: (n_levels, Lw). Per level, every slot builds its select
+    index from the gathered leaf bits and looks its output bit up in
+    its table — one gather per slot per sample instead of the fold's
+    word-parallel bitwise ops. Returns the (n_wires + 1, B) bit plane.
+    """
+    b = pi_bits.shape[1]
+    k = leaf_idx.shape[-1]
+    bits = jnp.zeros((n_wires + 1, b), jnp.int32)
+    bits = bits.at[1: n_pis + 1].set(pi_bits.astype(jnp.int32))
+    for lvl in range(leaf_idx.shape[0]):    # static level count
+        sel = sum((bits[leaf_idx[lvl, :, j]] << j) for j in range(k))
+        out = jnp.take_along_axis(tt01[lvl], sel, axis=1)   # (Lw, B)
+        bits = bits.at[out_wires[lvl]].set(out)
+    return bits

@@ -3,9 +3,11 @@
   # paper's product: compiled fixed-function logic serving
   PYTHONPATH=src python -m repro.launch.serve --mode logic --jsc jsc-s
 
-  # async micro-batching scheduler with 2 replicas under open-loop load
+  # async micro-batching scheduler with 2 replicas under open-loop load,
+  # mapped netlist executed on-device via the kernels/lut_eval kernel
   PYTHONPATH=src python -m repro.launch.serve --mode logic --sched \
-      --replicas 2 --loadgen open --qps 20000 --backend bitplane
+      --replicas 2 --loadgen open --qps 20000 --backend bitplane \
+      --engine pallas
 
   # continuous-batching LM decode on a smoke config
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch glm4-9b \
@@ -30,8 +32,8 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
 
 def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                 use_pallas: bool, backend: str = "gather",
-                sched: bool = False, replicas: int = 1,
-                qps: float = None, loadgen: str = None):
+                engine: str = "numpy", sched: bool = False,
+                replicas: int = 1, qps: float = None, loadgen: str = None):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -45,9 +47,10 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
     print("[serve] compiling to fixed-function logic ...")
     net = to_logic(cfg, res.params, res.masks, res.bn_state)
     if backend == "bitplane":
-        print("[serve] synthesizing mapped 6-LUT netlist (repro.synth) ...")
+        print(f"[serve] synthesizing mapped 6-LUT netlist (repro.synth, "
+              f"engine={engine}) ...")
     eng = LogicEngine(net, cfg.n_classes, use_pallas=use_pallas,
-                      backend=backend)
+                      backend=backend, engine=engine)
     if backend == "bitplane":
         print(f"  mapped: {eng.bitnet.mapped.n_luts} LUTs, "
               f"depth {eng.bitnet.mapped.depth}")
@@ -59,7 +62,7 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         from benchmarks import loadgen as lg
         out = lg.run(fast=True, backends=(backend,), n_requests=n_requests,
                      qps=qps, loadgen=loadgen, n_replicas=replicas,
-                     steps=train_steps)
+                     steps=train_steps, engine=engine)
         rec = out["backends"][backend]
         mode = "open_loop" if "open_loop" in rec else "closed_loop"
         print(f"[serve] {mode}: {rec[mode]['qps']:.0f} qps "
@@ -74,7 +77,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         if replicas > 1:                # independent data-parallel engines
             executor = build_logic_replicas(
                 net, cfg.n_classes, n_replicas=replicas, backend=backend,
-                max_batch=eng.max_batch, policy="least_loaded")
+                max_batch=eng.max_batch, policy="least_loaded",
+                engine=engine)
         s = MicroBatchScheduler(
             executor, SchedConfig(max_batch=eng.max_batch,
                                   max_queue=4 * n_requests * 64)).start()
@@ -132,6 +136,10 @@ def main(argv=None):
     ap.add_argument("--backend", choices=["gather", "pallas", "bitplane"],
                     default="gather",
                     help="logic inference path (bitplane = mapped netlist)")
+    ap.add_argument("--engine", choices=["numpy", "pallas"],
+                    default="numpy",
+                    help="bitplane netlist executor: host fold or the "
+                         "kernels/lut_eval on-device pipeline")
     ap.add_argument("--sched", action="store_true",
                     help="serve through the repro.serve micro-batch "
                          "scheduler instead of the blocking loop")
@@ -147,8 +155,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.mode == "logic":
         serve_logic(args.jsc, args.train_steps, args.requests, args.pallas,
-                    backend=args.backend, sched=args.sched,
-                    replicas=args.replicas, qps=args.qps,
+                    backend=args.backend, engine=args.engine,
+                    sched=args.sched, replicas=args.replicas, qps=args.qps,
                     loadgen=args.loadgen)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)

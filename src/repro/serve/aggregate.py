@@ -5,11 +5,17 @@ evaluates the whole mapped 6-LUT netlist once per pack. Here the lanes
 are filled with 32 concurrent *requests* instead: the scheduler's batch
 (row-concatenated request payloads) is quantized to input codes, each
 code bit scattered into its wire's bitplane with request r in bit r%32
-of word r//32, and one ``execute_packed`` call over the precompiled
-plan serves the entire pack — the paper's bit-level parallelism turned
+of word r//32, and one netlist evaluation over the precompiled plan
+serves the entire pack — the paper's bit-level parallelism turned
 into a request-throughput mechanism. Per-request argmaxes are sliced
 back out of the output planes, bit-identical to ``classify`` on the
 gather and Pallas paths.
+
+With ``BitplaneNetwork(engine="pallas")`` the packed words are handed
+straight to the device (``kernels.lut_eval``) and only the scattered
+argmax labels come back — pack → all levels → complement → argmax is
+one fused jit, so between enqueue and verdict nothing touches the host.
+The numpy engine keeps the host fold (``execute_packed``) + decode.
 """
 from __future__ import annotations
 
@@ -17,8 +23,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.synth.executor import BitplaneNetwork, execute_packed
-from repro.synth.simulate import WORD_BITS, pack_bits, unpack_bits
+from repro.synth.executor import BitplaneNetwork
+from repro.synth.simulate import WORD_BITS, pack_bits
 
 
 class BitplaneAggregator:
@@ -61,26 +67,17 @@ class BitplaneAggregator:
             planes[b::bn.in_bits] = ((codes >> b) & 1).T
         return pack_bits(planes)
 
-    def scatter_argmax(self, out_words: np.ndarray,
-                       n_rows: int) -> np.ndarray:
-        """Output planes -> per-request argmax labels, (n_rows,) int32."""
-        bn = self.bitnet
-        out_bits = unpack_bits(out_words, n_rows)      # (n_out_wires, B)
-        out_codes = np.zeros((n_rows, out_bits.shape[0] // bn.out_bits),
-                             np.int64)
-        for b in range(bn.out_bits):
-            out_codes |= out_bits[b::bn.out_bits].T.astype(np.int64) << b
-        vals = bn.out_levels[out_codes]
-        return np.argmax(vals[..., : self.n_classes], axis=-1).astype(np.int32)
-
     def __call__(self, x: np.ndarray) -> np.ndarray:
         x = np.asarray(x)
         pi_words = self.pack_requests(x)
-        out_words = execute_packed(self.bitnet.mapped, pi_words,
-                                   plan=self.bitnet._plan)
+        # engine dispatch happens inside classify_packed: the pallas
+        # engine ships the words to the device and returns only the
+        # scattered per-request argmax; numpy is the host fold + decode.
+        labels = self.bitnet.classify_packed(pi_words, x.shape[0],
+                                             self.n_classes)
         self.n_evals += pi_words.shape[1]       # one eval per lane-word
         self.n_rows += x.shape[0]
-        return self.scatter_argmax(out_words, x.shape[0])
+        return labels
 
     @property
     def mean_lane_occupancy(self) -> Optional[float]:

@@ -122,18 +122,21 @@ def mesh_placed(fn: Callable, mesh) -> Callable:
 
 def build_logic_replicas(net, n_classes: int, n_replicas: int = 1,
                          backend: str = "gather", max_batch: int = 256,
-                         policy: str = "rr", mesh=None) -> ReplicaSet:
+                         policy: str = "rr", mesh=None,
+                         engine: str = "numpy") -> ReplicaSet:
     """Data-parallel ``LogicEngine`` replicas behind one dispatch point.
 
     Each replica owns its own engine (own jit cache / synthesized
     netlist); with a mesh active, batches route through the
-    ``repro.dist`` sharding rules on their way in.
+    ``repro.dist`` sharding rules on their way in. ``engine`` selects
+    the bitplane backend's netlist executor (numpy fold or the
+    ``kernels.lut_eval`` device pipeline).
     """
     from repro.serving.engine import LogicEngine
 
     fns = []
     for _ in range(n_replicas):
         eng = LogicEngine(net, n_classes, max_batch=max_batch,
-                          backend=backend)
+                          backend=backend, engine=engine)
         fns.append(mesh_placed(eng.scheduler_executor(), mesh))
     return ReplicaSet(fns, policy=policy)

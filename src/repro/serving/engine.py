@@ -39,6 +39,11 @@ class LogicEngine:
       * ``"bitplane"`` — the ``repro.synth`` mapped 6-LUT netlist run as
         packed bitplane ops (32 samples per uint32 lane) — no per-neuron
         gathers at all. Argmax outputs are identical across backends.
+
+    For the bitplane backend, ``engine`` picks the netlist executor:
+    ``"numpy"`` folds levels on the host; ``"pallas"`` runs the whole
+    levelized netlist through the ``kernels.lut_eval`` device pipeline
+    (pack → levels → complement → argmax in one jit).
     """
 
     net: LogicNetwork
@@ -47,6 +52,7 @@ class LogicEngine:
     max_wait_ms: float = 0.2
     use_pallas: bool = False            # legacy alias for backend="pallas"
     backend: str = "gather"
+    engine: str = "numpy"               # bitplane netlist executor
     synth_effort: int = 1
 
     def __post_init__(self):
@@ -56,7 +62,7 @@ class LogicEngine:
             from repro.serve.aggregate import BitplaneAggregator
             from repro.synth import compile_logic_network
             self.bitnet = compile_logic_network(
-                self.net, effort=self.synth_effort)
+                self.net, effort=self.synth_effort, engine=self.engine)
             # padded aggregator: one quantizer shape for every flush size
             self._fn = BitplaneAggregator(self.bitnet, self.n_classes,
                                           pad_rows=self.max_batch)

@@ -15,7 +15,8 @@ The offline replacement for the Vivado step of NullaNet Tiny's flow:
 """
 from .aig import AIG, CONST0, CONST1, lit, lit_compl, lit_not, lit_var
 from .cuts import Cut, enumerate_cuts
-from .executor import BitplaneNetwork, emit_verilog, execute_packed
+from .executor import (BitplaneNetwork, DevicePlan, compile_device_plan,
+                       emit_verilog, execute_packed, execute_packed_pallas)
 from .from_sop import cover_to_aig, layer_to_aig, network_to_aig, table_to_aig
 from .lutmap import MappedLUT, MappedNetwork, map_aig
 from .rewrite import balance, optimize, rewrite
@@ -31,6 +32,13 @@ def synthesize(aig: AIG, effort: int = 1, k: int = 6) -> MappedNetwork:
     return map_aig(aig, k=k)
 
 
-def compile_logic_network(net, effort: int = 1, k: int = 6) -> BitplaneNetwork:
-    """LogicNetwork -> optimized mapped netlist, ready to execute."""
-    return BitplaneNetwork.from_logic_network(net, effort=effort, k=k)
+def compile_logic_network(net, effort: int = 1, k: int = 6,
+                          engine: str = "numpy",
+                          interpret=None) -> BitplaneNetwork:
+    """LogicNetwork -> optimized mapped netlist, ready to execute.
+
+    ``engine="pallas"`` runs the netlist through the fused
+    ``kernels.lut_eval`` device pipeline instead of the host fold."""
+    return BitplaneNetwork.from_logic_network(net, effort=effort, k=k,
+                                              engine=engine,
+                                              interpret=interpret)

@@ -8,6 +8,19 @@ over its six input planes (6 select steps, each one AND/ANDN/OR over the
 whole level). Per 32 samples, a LUT costs ~18 word ops regardless of
 batch size — the TPU/CPU analogue of the FPGA's spatial LUT fabric.
 
+Two execution engines share the mapped netlist:
+
+  * ``engine="numpy"``  — the host fold below (``execute_packed``),
+    level-by-level vectorized bitwise ops;
+  * ``engine="pallas"`` — ``compile_device_plan`` stacks the levelized
+    netlist into device-resident plan tensors (leaf indices, INIT
+    masks, output wires — constant-wire-padded to a uniform level
+    width) and the ``repro.kernels.lut_eval`` kernel evaluates every
+    level on-device with the wire plane resident in VMEM; bitplane
+    pack, all levels, the output complement and the per-request argmax
+    fuse into one jit, so nothing touches the host between enqueue and
+    verdict.
+
 ``emit_verilog`` prints the same netlist structurally (one INIT-indexed
 assign per LUT), i.e. the post-mapping artifact the paper gets out of
 Vivado, where ``repro.core.netlist`` only emitted pre-mapping SOPs.
@@ -21,7 +34,9 @@ import numpy as np
 
 from .aig import lit_compl, lit_var, tt_expand
 from .lutmap import MappedNetwork
-from .simulate import pack_bits, unpack_bits
+from .simulate import WORD_BITS, pack_bits, unpack_bits
+
+ENGINES = ("numpy", "pallas")
 
 # wire numbering for execution/emission:
 #   wire 0            = constant 0
@@ -110,6 +125,208 @@ def execute_packed(mapped: MappedNetwork, pi_words: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Device plan: level-stacked, width-padded tensors for the lut_eval kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DevicePlan:
+    """The mapped netlist as dense plan tensors for on-device execution.
+
+    Levels are padded with no-op slots to the widest level so the
+    tensors stack rectangularly: a padded slot reads the constant-0
+    wire (all leaves 0, INIT masks 0) and writes the dump row
+    ``n_wires`` — one past the last real wire — so the kernel's slot
+    walk needs no per-slot validity branch.
+    """
+
+    leaf_idx: np.ndarray     # (n_levels, Lw, k) int32 wire indices
+    tt_bits: np.ndarray      # (n_levels, Lw, 2^k) uint32 INIT masks
+    out_wires: np.ndarray    # (n_levels, Lw) int32 wire written
+    out_idx: np.ndarray      # (n_outputs,) int32 wire index per output
+    out_neg: np.ndarray      # (n_outputs,) bool complement flags
+    n_pis: int
+    n_wires: int             # 1 + n_pis + n_luts (dump row index)
+    k: int
+
+    @property
+    def n_levels(self) -> int:
+        return self.leaf_idx.shape[0]
+
+    @property
+    def level_width(self) -> int:
+        return self.leaf_idx.shape[1]
+
+
+def compile_device_plan(mapped: MappedNetwork,
+                        plan: Optional[_Plan] = None) -> DevicePlan:
+    """Stack the per-level arrays of ``_compile_plan`` into uniform-width
+    tensors ready to ship to the device."""
+    if plan is None:
+        plan = _compile_plan(mapped)
+    k = mapped.k
+    n_wires = 1 + mapped.n_pis + mapped.n_luts
+    n_levels = len(plan.levels)
+    lw = max((la.out_wires.shape[0] for la in plan.levels), default=0)
+    leaf_idx = np.full((n_levels, lw, k), _CONST_WIRE, np.int32)
+    tt_bits = np.zeros((n_levels, lw, 1 << k), np.uint32)
+    out_wires = np.full((n_levels, lw), n_wires, np.int32)   # dump row
+    for i, la in enumerate(plan.levels):
+        n = la.out_wires.shape[0]
+        leaf_idx[i, :n] = la.leaf_idx
+        tt_bits[i, :n] = la.tt_bits
+        out_wires[i, :n] = la.out_wires
+    return DevicePlan(leaf_idx, tt_bits, out_wires,
+                      plan.out_idx.copy(), plan.out_neg.copy(),
+                      mapped.n_pis, n_wires, k)
+
+
+def execute_packed_pallas(mapped: MappedNetwork, pi_words: np.ndarray,
+                          dplan: Optional[DevicePlan] = None,
+                          interpret: Optional[bool] = None) -> np.ndarray:
+    """``execute_packed`` through the lut_eval kernel: pi_words
+    (n_pis, W) uint32 -> output words (n_outputs, W) uint32."""
+    from repro.kernels.lut_eval import lut_eval
+
+    pi_words = np.asarray(pi_words, np.uint32)
+    assert pi_words.shape[0] == mapped.n_pis
+    if dplan is None:
+        dplan = compile_device_plan(mapped)
+    plane = lut_eval(pi_words, dplan.leaf_idx, dplan.tt_bits,
+                     dplan.out_wires, n_pis=dplan.n_pis,
+                     n_wires=dplan.n_wires, interpret=interpret)
+    out = plane[dplan.out_idx]
+    out[dplan.out_neg] = ~out[dplan.out_neg]
+    return out
+
+
+class _PallasExecutor:
+    """The fused on-device pipeline over a ``DevicePlan``.
+
+    Every public entry point is one jit: bitplane pack (32 samples per
+    int32 lane), the lut_eval kernel over all levels, the output
+    complement, code decode, and — for the classify paths — the
+    ``out_levels`` gather and per-request argmax. Distinct batch shapes
+    retrace; serving callers pin the shape (``pad_rows``) so the hot
+    path compiles once.
+    """
+
+    def __init__(self, bitnet: "BitplaneNetwork",
+                 interpret: Optional[bool] = None):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.lut_eval import default_interpret
+
+        self._jnp = jnp
+        dp = compile_device_plan(bitnet.mapped, bitnet._plan)
+        self.dp = dp
+        self.interpret = (default_interpret() if interpret is None
+                          else interpret)
+        self.in_bits = bitnet.in_bits
+        self.out_bits = bitnet.out_bits
+        self.n_slots = dp.n_levels * dp.level_width
+        self._leaf = jnp.asarray(dp.leaf_idx.reshape(-1, dp.k), jnp.int32)
+        self._tt = jnp.asarray(np.ascontiguousarray(
+            dp.tt_bits.reshape(-1, 1 << dp.k)).view(np.int32))
+        self._ow = jnp.asarray(dp.out_wires.reshape(-1), jnp.int32)
+        self._out_idx = jnp.asarray(dp.out_idx, jnp.int32)
+        self._neg = jnp.asarray(np.where(dp.out_neg, -1, 0), jnp.int32)
+        self._levels = jnp.asarray(bitnet.out_levels)
+        self._apply = jax.jit(self._apply_codes)
+        self._argmax_codes = jax.jit(self._argmax_from_codes,
+                                     static_argnames=("n_classes",))
+        self._argmax_words = jax.jit(self._argmax_from_words,
+                                     static_argnames=("n_classes",))
+
+    # ---- jit-traced building blocks -------------------------------------
+
+    def _pack(self, codes):
+        """(B, n_inputs) int32 codes -> (n_pi_wires, ceil(B/32)) int32
+        packed bitplanes (wire i*in_bits+b = bit b of code i)."""
+        jnp = self._jnp
+        b, n_in = codes.shape
+        shifts = jnp.arange(self.in_bits, dtype=jnp.int32)
+        bits = (codes[:, :, None].astype(jnp.int32) >> shifts) & 1
+        planes = bits.reshape(b, n_in * self.in_bits).T
+        pad = (-b) % WORD_BITS
+        if pad:
+            planes = jnp.pad(planes, ((0, 0), (0, pad)))
+        lanes = planes.reshape(planes.shape[0], -1, WORD_BITS)
+        # disjoint bit positions: int32 wraparound sum == bitwise OR
+        return (lanes << jnp.arange(WORD_BITS, dtype=jnp.int32)).sum(
+            axis=2, dtype=self._jnp.int32)
+
+    def _eval_words(self, words):
+        """(n_pis, W) int32 -> complemented output words (n_outputs, W)."""
+        from repro.kernels.lut_eval.lut_eval import (DEFAULT_BW,
+                                                     lut_eval_pallas)
+        jnp = self._jnp
+        dp = self.dp
+        w = words.shape[1]
+        bw = min(DEFAULT_BW, max(1, w))
+        pad = (-w) % bw
+        if pad:
+            words = jnp.pad(words, ((0, 0), (0, pad)))
+        if self.n_slots == 0:        # constant network: PIs + const only
+            plane = jnp.zeros((dp.n_wires + 1, words.shape[1]), jnp.int32)
+            plane = plane.at[1: dp.n_pis + 1].set(words)
+        else:
+            plane = lut_eval_pallas(
+                words, self._leaf, self._tt, self._ow, n_pis=dp.n_pis,
+                n_slots=self.n_slots, n_wires=dp.n_wires, k=dp.k,
+                block_w=bw, interpret=self.interpret)
+        return (plane[self._out_idx] ^ self._neg[:, None])[:, :w]
+
+    def _decode(self, out_words, b):
+        """(n_out_wires, W) int32 words -> (b, n_out) int32 codes."""
+        jnp = self._jnp
+        shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
+        bits = ((out_words[:, :, None] >> shifts) & 1)
+        bits = bits.reshape(out_words.shape[0], -1)[:, :b]
+        n_out = out_words.shape[0] // self.out_bits
+        grouped = bits.reshape(n_out, self.out_bits, b)
+        weights = jnp.arange(self.out_bits, dtype=jnp.int32)[None, :, None]
+        return (grouped << weights).sum(axis=1, dtype=jnp.int32).T
+
+    def _apply_codes(self, codes):
+        words = self._pack(codes)
+        return self._decode(self._eval_words(words), codes.shape[0])
+
+    def _argmax_from_codes(self, codes, n_classes: int):
+        jnp = self._jnp
+        vals = self._levels[self._apply_codes(codes)]
+        return jnp.argmax(vals[..., :n_classes], axis=-1).astype(jnp.int32)
+
+    def _argmax_from_words(self, words, n_classes: int):
+        jnp = self._jnp
+        out = self._eval_words(words)
+        codes = self._decode(out, words.shape[1] * WORD_BITS)
+        vals = self._levels[codes]
+        return jnp.argmax(vals[..., :n_classes], axis=-1).astype(jnp.int32)
+
+    # ---- host-facing API -------------------------------------------------
+
+    def apply_codes(self, codes: np.ndarray) -> np.ndarray:
+        jnp = self._jnp
+        out = self._apply(jnp.asarray(np.asarray(codes), jnp.int32))
+        return np.asarray(out).astype(np.int64)
+
+    def classify_codes(self, codes, n_classes: int) -> np.ndarray:
+        jnp = self._jnp
+        return np.asarray(self._argmax_codes(
+            jnp.asarray(codes, jnp.int32), n_classes=n_classes))
+
+    def classify_words(self, pi_words: np.ndarray, n_rows: int,
+                       n_classes: int) -> np.ndarray:
+        """Packed PI words straight to the device; only the per-request
+        argmax labels come back (the serve aggregation hot path)."""
+        jnp = self._jnp
+        words = jnp.asarray(
+            np.ascontiguousarray(pi_words, np.uint32).view(np.int32))
+        labels = self._argmax_words(words, n_classes=n_classes)
+        return np.asarray(labels)[:n_rows]
+
+
+# ---------------------------------------------------------------------------
 # Whole-network bitplane inference (LogicNetwork-compatible front end)
 # ---------------------------------------------------------------------------
 
@@ -119,27 +336,53 @@ class BitplaneNetwork:
     ``from_logic_network`` runs the full synthesis pipeline
     (SOP -> AIG -> balance/rewrite -> k-LUT map); ``__call__`` matches
     ``LogicNetwork.__call__`` bit-exactly on every reachable input.
+
+    ``engine`` selects where the netlist executes:
+      * ``"numpy"``  — host fold, level-by-level (``execute_packed``);
+      * ``"pallas"`` — the ``kernels.lut_eval`` kernel over the
+        device-resident plan, pack→levels→complement→argmax in one jit
+        (interpret-mode on CPU, compiled on TPU).
+    Both are bit-identical on every reachable input.
     """
 
-    def __init__(self, net, mapped: MappedNetwork):
+    def __init__(self, net, mapped: MappedNetwork, engine: str = "numpy",
+                 interpret: Optional[bool] = None):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown bitplane engine {engine!r} "
+                             f"(expected one of {ENGINES})")
         self.net = net
         self.mapped = mapped
+        self.engine = engine
+        self.interpret = interpret
         self._plan = _compile_plan(mapped)
+        self._device: Optional[_PallasExecutor] = None
         self.in_bits = net.in_spec.code_bits
         last = net.layers[-1]
         self.out_bits = last.out_spec.code_bits
         self.out_levels = np.asarray(last.out_spec.levels(last.out_alpha))
 
     @classmethod
-    def from_logic_network(cls, net, effort: int = 1,
-                           k: int = 6) -> "BitplaneNetwork":
+    def from_logic_network(cls, net, effort: int = 1, k: int = 6,
+                           engine: str = "numpy",
+                           interpret: Optional[bool] = None,
+                           ) -> "BitplaneNetwork":
         from . import synthesize        # lazy: package init imports us
         from .from_sop import network_to_aig
-        return cls(net, synthesize(network_to_aig(net), effort=effort, k=k))
+        return cls(net, synthesize(network_to_aig(net), effort=effort, k=k),
+                   engine=engine, interpret=interpret)
+
+    @property
+    def device(self) -> _PallasExecutor:
+        """The fused on-device executor (built lazily on first use)."""
+        if self._device is None:
+            self._device = _PallasExecutor(self, interpret=self.interpret)
+        return self._device
 
     def apply_codes(self, codes: np.ndarray) -> np.ndarray:
         """(B, n_inputs) input codes -> (B, n_out_neurons) output codes."""
         codes = np.asarray(codes, np.int64)
+        if self.engine == "pallas":
+            return self.device.apply_codes(codes)
         batch = codes.shape[0]
         # codes -> input bitplanes (wire i*in_bits+b = bit b of code i)
         planes = np.empty((codes.shape[1] * self.in_bits, batch), np.uint8)
@@ -160,7 +403,28 @@ class BitplaneNetwork:
         return self.out_levels[self.apply_codes(codes)]
 
     def classify(self, x, n_classes: int) -> np.ndarray:
+        if self.engine == "pallas":    # quantize → fused device pipeline
+            codes = np.asarray(self.net.quantize_inputs(x))
+            return self.device.classify_codes(codes, n_classes)
         vals = self(x)
+        return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
+
+    def classify_packed(self, pi_words: np.ndarray, n_rows: int,
+                        n_classes: int) -> np.ndarray:
+        """Packed PI bitplanes -> per-lane argmax labels, (n_rows,) int32.
+
+        The serve-aggregation entry point: on the pallas engine the
+        words go straight to the device and only the scattered argmax
+        returns; on numpy it is the host fold + decode."""
+        if self.engine == "pallas":
+            return self.device.classify_words(pi_words, n_rows, n_classes)
+        out_words = execute_packed(self.mapped, pi_words, plan=self._plan)
+        out_bits = unpack_bits(out_words, n_rows)
+        out_codes = np.zeros((n_rows, out_bits.shape[0] // self.out_bits),
+                             np.int64)
+        for b in range(self.out_bits):
+            out_codes |= out_bits[b::self.out_bits].T.astype(np.int64) << b
+        vals = self.out_levels[out_codes]
         return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
 
 

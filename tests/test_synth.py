@@ -193,13 +193,41 @@ def test_jsc_s_structural_report(jsc_s):
 
 
 def test_jsc_s_bitplane_engine_matches_gather(jsc_s):
+    """gather, numpy-bitplane and pallas-bitplane backends are
+    argmax-identical end to end, including the ragged final flush
+    through the aggregator's ``pad_rows`` (600 = 4*128 + 88)."""
     from repro.serving.engine import LogicEngine
     net, data = jsc_s
     (xte, _) = data[1]
     gather = LogicEngine(net, 5, max_batch=128)
     bitplane = LogicEngine(net, 5, max_batch=128, backend="bitplane")
-    np.testing.assert_array_equal(gather.classify(xte[:600]),
-                                  bitplane.classify(xte[:600]))
+    pallas = LogicEngine(net, 5, max_batch=128, backend="bitplane",
+                         engine="pallas")
+    want = gather.classify(xte[:600])
+    np.testing.assert_array_equal(want, bitplane.classify(xte[:600]))
+    np.testing.assert_array_equal(want, pallas.classify(xte[:600]))
+
+
+def test_jsc_s_pallas_engine_bit_identical(jsc_s):
+    """The fused lut_eval device pipeline is *bit*-identical to the
+    numpy fold (codes and packed words, not just argmax)."""
+    from repro.synth.executor import BitplaneNetwork
+    from repro.synth.simulate import pack_bits
+    net, data = jsc_s
+    bit = compile_logic_network(net, effort=1)
+    dev = BitplaneNetwork(net, bit.mapped, engine="pallas")
+    (xte, _) = data[1]
+    for n in (64, 97):                       # full + ragged lane words
+        codes = np.asarray(net.quantize_inputs(jnp.asarray(xte[:n])))
+        np.testing.assert_array_equal(bit.apply_codes(codes),
+                                      dev.apply_codes(codes))
+        planes = np.empty((codes.shape[1] * bit.in_bits, n), np.uint8)
+        for b in range(bit.in_bits):
+            planes[b::bit.in_bits] = ((codes >> b) & 1).T
+        words = pack_bits(planes)
+        np.testing.assert_array_equal(
+            bit.classify_packed(words, n, 5),
+            dev.classify_packed(words, n, 5))
 
 
 def test_emit_mapped_network(jsc_s):
