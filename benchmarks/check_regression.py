@@ -56,6 +56,10 @@ LOWER, HIGHER = "lower", "higher"        # which direction is better
 _LAT_KEYS = (("p50_us", LOWER), ("p95_us", LOWER), ("p99_us", LOWER),
              ("mean_us", LOWER))
 _THROUGHPUT_KEYS = (("qps", HIGHER), ("throughput_x_sequential", HIGHER))
+# deadline-miss-rate is lower-is-better; SLO attainment is its
+# complement. Both are load-normalized fractions, so unlike open-loop
+# queueing latencies they are comparable across machine speeds.
+_SLO_KEYS = (("deadline_miss_rate", LOWER), ("slo_attainment", HIGHER))
 
 
 def load_baseline(name: str, baseline_dir: Optional[str]) -> Optional[dict]:
@@ -97,15 +101,24 @@ def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
             for mode, r in rec.items():
                 if not isinstance(r, dict):
                     continue
-                # open-loop latencies are queueing at a machine-relative
-                # offered rate — load-amplified, not comparable across
-                # machines (see module docstring)
-                keys = (_THROUGHPUT_KEYS if mode == "open_loop"
-                        else _LAT_KEYS + _THROUGHPUT_KEYS)
+                # open-loop latencies (incl. the slo_lanes open loop)
+                # are queueing at a machine-relative offered rate —
+                # load-amplified, not comparable across machines (see
+                # module docstring)
+                keys = (_SLO_KEYS + _THROUGHPUT_KEYS
+                        if mode in ("open_loop", "slo_lanes")
+                        else _LAT_KEYS + _THROUGHPUT_KEYS + _SLO_KEYS)
                 for key, direction in keys:
                     if key in r:
                         out[f"serve/{b}/{mode}/{key}"] = (
                             float(r[key]), direction)
+                for lane, lrec in (r.get("lanes") or {}).items():
+                    if not isinstance(lrec, dict):
+                        continue
+                    for key, direction in _SLO_KEYS:
+                        if key in lrec:
+                            out[f"serve/{b}/{mode}/lane{lane}/{key}"] = (
+                                float(lrec[key]), direction)
     elif isinstance(res, dict) and res:
         for k, v in res.items():
             if isinstance(v, (int, float)) and not isinstance(v, bool):
@@ -116,16 +129,31 @@ def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
     return out
 
 
+_RATE_SUFFIXES = ("deadline_miss_rate", "slo_attainment")
+
+
+def _is_rate(name: str) -> bool:
+    return name.endswith(_RATE_SUFFIXES)
+
+
 def compare(base: Dict[str, Tuple[float, str]],
             fresh: Dict[str, Tuple[float, str]],
             tolerance: float, min_us: float,
-            normalize: bool = True, max_drift: float = 3.0):
+            normalize: bool = True, max_drift: float = 3.0,
+            min_rate: float = 0.05):
     """Returns (regressions, checked, only_one_side, drift).
 
     ``checked`` rows are (name, base, fresh, raw_ratio, residual,
     direction); a row regresses when its drift-normalized residual
     exceeds 1 + tolerance. ``residual`` is oriented so that > 1 always
-    means "worse", whichever direction the metric prefers."""
+    means "worse", whichever direction the metric prefers.
+
+    Rate metrics ([0, 1] fractions: deadline-miss rate, SLO attainment)
+    are floored at ``min_rate`` on both sides instead of being skipped
+    at zero — a miss rate's *healthy* value is exactly 0.0, and the
+    generic zero-skip would make a regression from a clean baseline
+    (0.0 -> 0.4) invisible. The floor doubles as the noise tolerance:
+    0.0 -> 0.03 compares as 1x, 0.0 -> 0.4 as 8x."""
     effective: Dict[str, float] = {}
     rows = []
     for name in sorted(set(base) | set(fresh)):
@@ -134,17 +162,25 @@ def compare(base: Dict[str, Tuple[float, str]],
             continue
         bv, direction = base[name]
         fv = fresh[name][0]
-        if direction == LOWER and max(bv, fv) < min_us:
-            continue                         # sub-floor: timer noise
-        if bv <= 0 or fv <= 0:
-            continue
-        ratio = fv / bv
+        if _is_rate(name):
+            cb, cf = max(bv, min_rate), max(fv, min_rate)
+        else:
+            if direction == LOWER and max(bv, fv) < min_us:
+                continue                     # sub-floor: timer noise
+            if bv <= 0 or fv <= 0:
+                continue
+            cb, cf = bv, fv
+        ratio = cf / cb
         effective[name] = ratio if direction == LOWER else 1.0 / ratio
         rows.append((name, (bv, fv, ratio, direction)))
 
     drift = 1.0
-    if normalize and len(effective) >= 3:    # too few metrics to estimate
-        drift = median(effective.values())
+    # drift estimates the uniform machine-speed factor — from timing
+    # metrics only; rates are fractions of offered load and neither
+    # inform nor receive the correction
+    timing = [v for n, v in effective.items() if not _is_rate(n)]
+    if normalize and len(timing) >= 3:       # too few metrics to estimate
+        drift = median(timing)
         drift = min(max(drift, 1.0 / max_drift), max_drift)
 
     regressions, checked, only_one = [], [], []
@@ -153,7 +189,7 @@ def compare(base: Dict[str, Tuple[float, str]],
             only_one.append(name)
             continue
         bv, fv, ratio, direction = payload
-        residual = effective[name] / drift
+        residual = effective[name] / (1.0 if _is_rate(name) else drift)
         row = (name, bv, fv, ratio, residual, direction)
         checked.append(row)
         if residual > 1.0 + tolerance:
@@ -171,6 +207,11 @@ def main(argv=None) -> int:
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="skip latency metrics where both sides are "
                          "below this (timer noise)")
+    ap.add_argument("--min-rate", type=float, default=0.05,
+                    help="floor for rate metrics (miss rate / "
+                         "attainment): values below it compare as "
+                         "equal, so a clean 0.0 baseline still catches "
+                         "a real regression without noise-failing")
     ap.add_argument("--no-normalize", action="store_true",
                     help="compare raw ratios (no median machine-speed "
                          "drift correction)")
@@ -204,7 +245,8 @@ def main(argv=None) -> int:
         regs, checked, only_one, drift = compare(
             extract_metrics(base_doc), extract_metrics(fresh_doc),
             args.tolerance, args.min_us,
-            normalize=not args.no_normalize, max_drift=args.max_drift)
+            normalize=not args.no_normalize, max_drift=args.max_drift,
+            min_rate=args.min_rate)
         any_checked = any_checked or bool(checked)
         print(f"[regress] {name}: {len(checked)} metrics checked "
               f"(drift x{drift:.2f}), {len(only_one)} one-sided "

@@ -10,6 +10,11 @@ at the repo root:
     does not wait for completions — the honest overload model);
   * closed-loop — a fixed concurrency of submit→wait workers (peak
     sustainable throughput at bounded in-flight);
+  * slo-lanes   — a two-lane open loop at moderate load (tight SLO on
+    lane 0, loose on lane 1, budgets from ``--slo-us`` or scaled from
+    the measured service time): per-lane deadline-miss rate / SLO
+    attainment / shed counts, with expired requests shed via typed
+    ``DEADLINE_EXCEEDED`` rejects instead of served late;
   * baseline    — the *legacy* sequential ``serve_queue`` semantics
     (one blocking padded evaluation per request), replayed against the
     same arrival trace with a busy-server queueing model so its
@@ -142,6 +147,45 @@ def run_open_loop(executor, xs: np.ndarray, qps: float, seed: int = 0,
     return results, sched.metrics.snapshot()
 
 
+def run_slo_lanes(executor, xs: np.ndarray, qps: float,
+                  slo_us: Sequence[float], seed: int = 0,
+                  max_batch: int = 256, max_wait_us: float = 200.0,
+                  tight_every: int = 4):
+    """Two-lane SLO open loop: every ``tight_every``-th request rides
+    lane 0 (tight SLO), the rest lane 1 (loose SLO). Deadlines default
+    from the per-lane table; expired requests are shed with a typed
+    ``DEADLINE_EXCEEDED`` reject rather than served late. Returns
+    (results with -1 for shed/rejected, lane assignment, snapshot)."""
+    from repro.serve import MicroBatchScheduler, RequestRejected, SchedConfig
+
+    n = xs.shape[0]
+    cfg = SchedConfig(max_batch=max_batch, max_wait_us=max_wait_us,
+                      max_queue=2 * n, n_priorities=max(2, len(slo_us)),
+                      lane_slo_us=tuple(slo_us))
+    sched = MicroBatchScheduler(executor, cfg).start()
+    arrivals = poisson_arrivals_us(n, qps, seed)
+    lanes = np.where(np.arange(n) % tight_every == 0, 0,
+                     min(1, len(slo_us) - 1)).astype(np.int32)
+    futs: List = [None] * n
+    t0 = time.perf_counter() * 1e6
+    for i in range(n):
+        _pace_until(arrivals[i], t0)
+        try:
+            futs[i] = sched.submit(xs[i], priority=int(lanes[i]))
+        except RequestRejected:
+            pass
+    sched.stop(drain=True)
+    results = np.full((n,), -1, np.int32)
+    for i, f in enumerate(futs):
+        if f is None:
+            continue
+        try:
+            results[i] = int(f.result(timeout=30))
+        except RequestRejected:
+            pass                        # shed past its lane deadline
+    return results, lanes, sched.metrics.snapshot()
+
+
 def run_closed_loop(executor, xs: np.ndarray, concurrency: int = 32,
                     max_batch: int = 256, max_wait_us: float = 200.0):
     """Fixed in-flight submit→wait workers (peak throughput probe)."""
@@ -178,18 +222,30 @@ def run_closed_loop(executor, xs: np.ndarray, concurrency: int = 32,
 # ---------------------------------------------------------------------------
 
 def _snap_row(snap: Dict) -> Dict[str, float]:
-    keys = ("completed", "rejected", "p50_us", "p95_us", "p99_us",
-            "mean_us", "qps", "n_batches", "mean_batch_rows",
-            "mean_batch_occupancy", "max_queue_depth")
+    keys = ("completed", "rejected", "shed", "deadline_miss_rate",
+            "p50_us", "p95_us", "p99_us", "mean_us", "qps", "n_batches",
+            "mean_batch_rows", "mean_batch_occupancy", "max_queue_depth")
     return {k: (round(snap[k], 3) if isinstance(snap[k], float)
                 else snap[k]) for k in keys}
+
+
+def _lane_row(lane_snap: Dict, slo: float) -> Dict[str, float]:
+    keys = ("completed", "completed_with_deadline", "missed", "shed",
+            "deadline_miss_rate", "slo_attainment", "p50_us", "p95_us",
+            "p99_us", "slack_p50_us", "mean_slack_us")
+    row = {k: (round(lane_snap[k], 3) if isinstance(lane_snap[k], float)
+               else lane_snap[k]) for k in keys}
+    row["slo_us"] = slo
+    row["p99_under_slo"] = bool(lane_snap["p99_us"] <= slo)
+    return row
 
 
 def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
         n_requests: Optional[int] = None, qps: Optional[float] = None,
         loadgen: str = "both", n_replicas: int = 1, steps: Optional[int] = None,
         seed: int = 0, write_json: bool = True,
-        engine: str = "numpy") -> Dict:
+        engine: str = "numpy",
+        slo_us: Optional[Sequence[float]] = None) -> Dict:
     """Train JSC-S once, then loadgen every backend through the
     scheduler; returns (and optionally writes) the BENCH_serve record."""
     from repro.configs.jsc import JSC_S
@@ -227,16 +283,33 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
     base["service_mean_us"] = float(call_us.mean())
     base["capacity_qps"] = capacity_qps
 
+    # SLO lanes: tight/loose deadline budgets scaled from the measured
+    # service time so attainment is meaningful on any machine, driven at
+    # moderate load (below the scheduler's capacity) — the regime where
+    # the tight lane's p99 should sit under its SLO and sheds stay rare
+    service_mean = float(call_us.mean())
+    if slo_us is None:
+        tight = max(5_000.0, 25.0 * service_mean)
+        slo_us = (tight, 10.0 * tight)
+    slo_us = tuple(float(v) for v in slo_us)
+    slo_qps = 1.5 * capacity_qps
+
     out: Dict = {"n_requests": n_requests, "offered_qps": round(offered, 1),
                  "train_steps": steps, "seed": seed,
+                 "slo_us": list(slo_us),
+                 "slo_offered_qps": round(slo_qps, 1),
                  "baseline_sequential": base, "backends": {}}
     for b in backends:
         be, en = resolved[b]
         executor = engines[b].scheduler_executor()
         if n_replicas > 1:              # independent data-parallel engines
+            # least_slack so the slo_lanes section measures the same
+            # deadline-aware dispatch the launch --sched path runs;
+            # with no deadlines it degenerates to exec-time-weighted
+            # least-loaded, so open/closed numbers stay comparable
             executor = build_logic_replicas(
                 net, JSC_S.n_classes, n_replicas=n_replicas, backend=be,
-                max_batch=max_batch, policy="least_loaded", engine=en)
+                max_batch=max_batch, policy="least_slack", engine=en)
         rec: Dict = {"engine": en} if be == "bitplane" else {}
         if loadgen in ("open", "both"):
             got, snap = run_open_loop(executor, xs, offered, seed=seed,
@@ -246,6 +319,22 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
                 np.array_equal(got, direct[b]))
             rec["open_loop"]["throughput_x_sequential"] = round(
                 snap["qps"] / base["qps"], 2) if base["qps"] else 0.0
+            # per-lane SLO attainment under moderate two-lane load
+            got, lanes, snap = run_slo_lanes(executor, xs, slo_qps, slo_us,
+                                             seed=seed, max_batch=max_batch)
+            served = got >= 0
+            rec["slo_lanes"] = {
+                "offered_qps": round(slo_qps, 1),
+                "slo_us": list(slo_us),
+                "completed": snap["completed"],
+                "shed": snap["shed"],
+                "deadline_miss_rate": round(snap["deadline_miss_rate"], 4),
+                "qps": round(snap["qps"], 3),
+                "identical_on_served": bool(np.array_equal(
+                    got[served], direct[b][served])),
+                "lanes": {lane: _lane_row(ls, slo_us[int(lane)])
+                          for lane, ls in snap["lanes"].items()},
+            }
         if loadgen in ("closed", "both"):
             got, snap = run_closed_loop(executor, xs, max_batch=max_batch)
             rec["closed_loop"] = _snap_row(snap)
@@ -278,17 +367,32 @@ def main(argv=None):
     ap.add_argument("--engine", choices=["numpy", "pallas"], default="numpy",
                     help="bitplane netlist executor (host fold or the "
                          "kernels/lut_eval on-device pipeline)")
+    ap.add_argument("--slo-us", default=None,
+                    help="comma list of per-lane SLO deadline budgets in µs "
+                         "(tight lane first, e.g. '5000,50000'; default: "
+                         "scaled from the measured service time)")
     args = ap.parse_args(argv)
+    slo_us = (tuple(float(v) for v in args.slo_us.split(","))
+              if args.slo_us else None)
     out = run(fast=args.fast, backends=tuple(args.backends.split(",")),
               n_requests=args.requests, qps=args.qps, loadgen=args.loadgen,
               n_replicas=args.replicas, steps=args.steps, seed=args.seed,
-              engine=args.engine)
+              engine=args.engine, slo_us=slo_us)
     base = out["baseline_sequential"]
     print(f"[loadgen] sequential baseline: {base['qps']:.0f} qps "
           f"p95={base['p95_us']:.0f}us")
     for b, rec in out["backends"].items():
         for mode, r in rec.items():
             if not isinstance(r, dict):     # per-backend metadata (engine)
+                continue
+            if mode == "slo_lanes":
+                for lane, lr in r["lanes"].items():
+                    print(f"[loadgen] {b}/slo lane {lane} "
+                          f"(slo={lr['slo_us']:.0f}us): "
+                          f"attainment={lr['slo_attainment']:.3f} "
+                          f"miss_rate={lr['deadline_miss_rate']:.3f} "
+                          f"shed={lr['shed']} p99={lr['p99_us']:.0f}us "
+                          f"p99_under_slo={lr['p99_under_slo']}")
                 continue
             print(f"[loadgen] {b}/{mode}: {r['qps']:.0f} qps "
                   f"p50={r['p50_us']:.0f}us p95={r['p95_us']:.0f}us "

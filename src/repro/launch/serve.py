@@ -33,7 +33,8 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
 def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                 use_pallas: bool, backend: str = "gather",
                 engine: str = "numpy", sched: bool = False,
-                replicas: int = 1, qps: float = None, loadgen: str = None):
+                replicas: int = 1, qps: float = None, loadgen: str = None,
+                slo_us: tuple = None):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -62,36 +63,56 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         from benchmarks import loadgen as lg
         out = lg.run(fast=True, backends=(backend,), n_requests=n_requests,
                      qps=qps, loadgen=loadgen, n_replicas=replicas,
-                     steps=train_steps, engine=engine)
+                     steps=train_steps, engine=engine, slo_us=slo_us)
         rec = out["backends"][backend]
         mode = "open_loop" if "open_loop" in rec else "closed_loop"
         print(f"[serve] {mode}: {rec[mode]['qps']:.0f} qps "
               f"p95={rec[mode]['p95_us']:.1f}us "
               f"occ={rec[mode]['mean_batch_occupancy']:.2f}")
+        if "slo_lanes" in rec:
+            for lane, lr in rec["slo_lanes"]["lanes"].items():
+                print(f"[serve] slo lane {lane} "
+                      f"({rec['slo_lanes']['slo_us'][int(lane)]:.0f}us): "
+                      f"attainment={lr['slo_attainment']:.3f} "
+                      f"miss_rate={lr['deadline_miss_rate']:.3f} "
+                      f"shed={lr['shed']} p99={lr['p99_us']:.0f}us")
         return rec
 
     if sched:                           # scheduler + replica dispatch
-        from repro.serve import (MicroBatchScheduler, SchedConfig,
-                                 build_logic_replicas)
+        from repro.serve import (MicroBatchScheduler, RequestRejected,
+                                 SchedConfig, build_logic_replicas)
         executor = eng.scheduler_executor()
         if replicas > 1:                # independent data-parallel engines
             executor = build_logic_replicas(
                 net, cfg.n_classes, n_replicas=replicas, backend=backend,
-                max_batch=eng.max_batch, policy="least_loaded",
+                max_batch=eng.max_batch,
+                policy="least_slack" if slo_us else "least_loaded",
                 engine=engine)
         s = MicroBatchScheduler(
             executor, SchedConfig(max_batch=eng.max_batch,
-                                  max_queue=4 * n_requests * 64)).start()
+                                  max_queue=4 * n_requests * 64,
+                                  n_priorities=max(2, len(slo_us or ())),
+                                  lane_slo_us=slo_us)).start()
         futs = [s.submit(xte[i % xte.shape[0]])
                 for i in range(n_requests * 64)]
         s.stop(drain=True)
-        got = np.array([int(f.result(timeout=30)) for f in futs], np.int32)
-        acc = float(np.mean(got == yte[np.arange(len(got)) % yte.shape[0]]))
+        got = np.full((len(futs),), -1, np.int32)
+        for i, f in enumerate(futs):
+            try:
+                got[i] = int(f.result(timeout=30))
+            except RequestRejected:
+                pass                    # shed past its lane SLO
+        served = got >= 0
+        acc = float(np.mean(
+            got[served] == yte[np.arange(len(got)) % yte.shape[0]][served]
+        )) if served.any() else 0.0
         snap = s.metrics.snapshot()
         print(f"[serve] sched x{replicas}: {len(futs)} requests "
               f"acc={acc:.4f} p50={snap['p50_us']:.1f}us "
               f"p95={snap['p95_us']:.1f}us qps={snap['qps']:.0f} "
-              f"occ={snap['mean_batch_occupancy']:.2f}")
+              f"occ={snap['mean_batch_occupancy']:.2f} "
+              f"shed={snap['shed']} "
+              f"miss_rate={snap['deadline_miss_rate']:.3f}")
         return snap
 
     reqs = [xte[i * 64: (i + 1) * 64] for i in range(n_requests)]
@@ -152,12 +173,19 @@ def main(argv=None):
                     default=None,
                     help="drive the scheduler with the benchmarks/"
                          "loadgen.py harness and report p50/p95/p99+QPS")
+    ap.add_argument("--slo-us", default=None,
+                    help="comma list of per-lane SLO deadline budgets in "
+                         "µs (lane 0 first, e.g. '100,1000'); requests "
+                         "past their lane budget are shed with a typed "
+                         "DEADLINE_EXCEEDED reject")
     args = ap.parse_args(argv)
+    slo_us = (tuple(float(v) for v in args.slo_us.split(","))
+              if args.slo_us else None)
     if args.mode == "logic":
         serve_logic(args.jsc, args.train_steps, args.requests, args.pallas,
                     backend=args.backend, engine=args.engine,
                     sched=args.sched, replicas=args.replicas, qps=args.qps,
-                    loadgen=args.loadgen)
+                    loadgen=args.loadgen, slo_us=slo_us)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)
 

@@ -3,13 +3,17 @@
 The throughput layer over the paper's fixed-function logic inference:
 
   sched     — event-driven micro-batch scheduler (injectable clock,
-              deadline/size flush, priority lanes, typed backpressure);
+              per-lane SLO deadlines with EDF batch formation and
+              expiry shedding, deadline/size flush, priority lanes,
+              typed backpressure);
   aggregate — bitplane request aggregation: 32 concurrent requests per
               uint32 lane through one ``repro.synth`` netlist eval;
-  replica   — round-robin / least-loaded dispatch with failover over
-              data-parallel replicas placed via ``repro.dist``;
-  metrics   — enqueue→complete latency histograms, queue depth, batch
-              occupancy and QPS;
+  replica   — round-robin / least-loaded / least-slack dispatch with
+              deadline-aware failover over data-parallel replicas
+              placed via ``repro.dist``;
+  metrics   — enqueue→complete latency histograms, per-lane
+              deadline-miss rates, slack histograms, shed counts,
+              queue depth, batch occupancy and QPS;
   clock     — SystemClock / FakeClock so the whole engine is
               deterministic under test.
 

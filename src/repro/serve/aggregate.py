@@ -41,11 +41,15 @@ class BitplaneAggregator:
         self.n_classes = n_classes
         self.lanes_per_word = WORD_BITS
         self.pad_rows = pad_rows
-        self.n_evals = 0            # netlist evaluations issued
+        self.n_features = bitnet.net.n_inputs   # admission width check
+        self.n_evals = 0            # lane-words carrying >= 1 real request
         self.n_rows = 0             # request rows served
+        self.n_pad_rows = 0         # shape-stability padding rows added
+        self.n_partial_packs = 0    # flushes whose last lane-word is partial
         if pad_rows:                # warm the single quantizer shape
             self(np.zeros((1, bitnet.net.n_inputs), np.float32))
             self.n_evals = self.n_rows = 0
+            self.n_pad_rows = self.n_partial_packs = 0
 
     def pack_requests(self, x: np.ndarray) -> np.ndarray:
         """(B, n_features) real inputs -> (n_pi_wires, ceil(B/32)) words.
@@ -67,21 +71,38 @@ class BitplaneAggregator:
             planes[b::bn.in_bits] = ((codes >> b) & 1).T
         return pack_bits(planes)
 
-    def __call__(self, x: np.ndarray) -> np.ndarray:
+    def __call__(self, x: np.ndarray,
+                 deadline_us: Optional[float] = None) -> np.ndarray:
+        """Evaluate one request pack. ``deadline_us`` (the tightest
+        absolute SLO deadline in the batch, forwarded by the scheduler)
+        is what triggers partial-pack flushes upstream: the scheduler
+        dispatches before the lane-word is full whenever that deadline
+        cannot absorb further fill-wait, and ``n_partial_packs`` counts
+        how often the pack went out with idle lanes as a result."""
         x = np.asarray(x)
+        true_rows = x.shape[0]
         pi_words = self.pack_requests(x)
         # engine dispatch happens inside classify_packed: the pallas
         # engine ships the words to the device and returns only the
         # scattered per-request argmax; numpy is the host fold + decode.
-        labels = self.bitnet.classify_packed(pi_words, x.shape[0],
+        labels = self.bitnet.classify_packed(pi_words, true_rows,
                                              self.n_classes)
-        self.n_evals += pi_words.shape[1]       # one eval per lane-word
-        self.n_rows += x.shape[0]
+        # occupancy is accounted against *real* request rows: lane-words
+        # that exist only because of pad_rows shape-stability padding
+        # are tracked separately, not counted as served capacity.
+        self.n_evals += -(-true_rows // self.lanes_per_word)
+        self.n_rows += true_rows
+        if self.pad_rows and true_rows < self.pad_rows:
+            self.n_pad_rows += self.pad_rows - true_rows
+        if true_rows % self.lanes_per_word:
+            self.n_partial_packs += 1
         return labels
 
     @property
     def mean_lane_occupancy(self) -> Optional[float]:
-        """Fraction of uint32 lanes carrying a real request."""
+        """Fraction of uint32 lanes (in lane-words carrying at least one
+        real request) filled by a real request; shape-stability pad rows
+        are excluded (see ``n_pad_rows``)."""
         if self.n_evals == 0:
             return None
         return self.n_rows / (self.n_evals * self.lanes_per_word)

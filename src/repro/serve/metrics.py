@@ -76,6 +76,52 @@ class BatchStat:
     exec_us: float
 
 
+class LaneStats:
+    """Per-priority-lane deadline accounting.
+
+    A lane's deadline-miss rate counts both kinds of SLO failure:
+    requests *shed* before dispatch (expired in queue) and requests
+    *served late* (completed past their deadline). The denominator is
+    deadline-carrying traffic only, and a lane that carried none omits
+    ``deadline_miss_rate`` / ``slo_attainment`` from its snapshot
+    entirely — a fake perfect score would otherwise seed benchmark
+    baselines with a metric that was never measured.
+    """
+
+    def __init__(self):
+        self.completed = 0              # all completions on this lane
+        self.with_deadline = 0          # completions that carried an SLO
+        self.missed = 0                 # completed but past deadline
+        self.shed = 0                   # expired before dispatch
+        self.lat = LatencyHistogram()
+        self.slack = LatencyHistogram()     # positive slack at completion
+        self.slack_sum_us = 0.0             # signed, over with_deadline
+
+    def snapshot(self) -> Dict[str, float]:
+        slo_n = self.with_deadline + self.shed
+        out = {
+            "completed": self.completed,
+            "completed_with_deadline": self.with_deadline,
+            "missed": self.missed,
+            "shed": self.shed,
+            "p50_us": self.lat.percentile(50),
+            "p95_us": self.lat.percentile(95),
+            "p99_us": self.lat.percentile(99),
+            "slack_p50_us": self.slack.percentile(50),
+            "slack_p10_us": self.slack.percentile(10),
+            "mean_slack_us": (self.slack_sum_us / self.with_deadline
+                              if self.with_deadline else 0.0),
+            "slack_buckets": self.slack.buckets(),
+        }
+        if slo_n:        # only lanes that carried deadlines get a rate:
+            # a deadline-free lane reporting attainment 1.0 would seed
+            # regression baselines with a score that was never measured
+            miss = (self.missed + self.shed) / slo_n
+            out["deadline_miss_rate"] = miss
+            out["slo_attainment"] = 1.0 - miss
+        return out
+
+
 class ServeMetrics:
     """Thread-safe accumulator for one scheduler (or engine) lifetime."""
 
@@ -86,12 +132,18 @@ class ServeMetrics:
         self.completed = 0
         self.rejected: Dict[str, int] = {}
         self.errors = 0
+        self.lanes: Dict[int, LaneStats] = {}
         self.queue_depth_sum = 0
         self.queue_depth_n = 0
         self.max_queue_depth = 0
         self.t_first_enqueue_us: Optional[float] = None
         self.t_last_done_us: Optional[float] = None
         self._lock = threading.Lock()
+
+    def _lane(self, lane: int) -> LaneStats:
+        if lane not in self.lanes:
+            self.lanes[lane] = LaneStats()
+        return self.lanes[lane]
 
     # -- recording ---------------------------------------------------------
     def record_enqueue(self, depth: int, now_us: float) -> None:
@@ -111,11 +163,30 @@ class ServeMetrics:
         with self._lock:
             self.batches.append(BatchStat(rows, occ, exec_us))
 
-    def record_done(self, latency_us: float, now_us: float) -> None:
+    def record_done(self, latency_us: float, now_us: float, lane: int = 0,
+                    deadline_us: float = math.inf) -> None:
         with self._lock:
             self.lat.record(latency_us)
             self.completed += 1
             self.t_last_done_us = now_us
+            ls = self._lane(lane)
+            ls.completed += 1
+            ls.lat.record(latency_us)
+            if math.isfinite(deadline_us):
+                slack = deadline_us - now_us
+                ls.with_deadline += 1
+                ls.slack_sum_us += slack
+                if slack >= 0:
+                    ls.slack.record(slack)
+                else:
+                    ls.missed += 1      # served, but past its deadline
+
+    def record_shed(self, lane: int = 0) -> None:
+        """An expired request rejected before dispatch (SLO shed)."""
+        with self._lock:
+            self._lane(lane).shed += 1
+            self.rejected["deadline_exceeded"] = (
+                self.rejected.get("deadline_exceeded", 0) + 1)
 
     def record_error(self, n_requests: int = 1) -> None:
         with self._lock:
@@ -130,11 +201,21 @@ class ServeMetrics:
                 span_us = self.t_last_done_us - self.t_first_enqueue_us
             occ = [b.occupancy for b in self.batches]
             rows = [b.rows for b in self.batches]
+            shed = sum(ls.shed for ls in self.lanes.values())
+            missed = sum(ls.missed for ls in self.lanes.values())
+            slo_n = shed + sum(ls.with_deadline
+                               for ls in self.lanes.values())
             return {
                 "completed": self.completed,
                 "rejected": int(sum(self.rejected.values())),
                 "rejected_by_reason": dict(self.rejected),
                 "errors": self.errors,
+                "shed": shed,
+                "deadline_missed": missed,
+                "deadline_miss_rate": ((missed + shed) / slo_n
+                                       if slo_n else 0.0),
+                "lanes": {str(k): ls.snapshot()
+                          for k, ls in sorted(self.lanes.items())},
                 "p50_us": self.lat.percentile(50),
                 "p95_us": self.lat.percentile(95),
                 "p99_us": self.lat.percentile(99),

@@ -1,9 +1,19 @@
-"""N-replica dispatch: round-robin / least-loaded over engine replicas.
+"""N-replica dispatch: round-robin / least-loaded / least-slack over
+engine replicas.
 
 A ``ReplicaSet`` is itself a scheduler executor — it picks a healthy
 replica per batch, retries the batch on the next replica when one
 raises (failover), and only surfaces an error once every replica is
-down. Replicas are data-parallel copies of the serving function; when a
+down. It accepts the scheduler's ``deadline_us`` (the tightest absolute
+SLO deadline in the batch): the ``least_slack`` policy routes to the
+replica with the smallest expected completion time (in-flight load x
+smoothed per-replica execution time — the choice that preserves the
+most slack), and on failover the remaining budget is re-stamped — if
+the deadline passed while a replica was failing, the retry is abandoned
+with a typed ``RequestRejected(DEADLINE_EXCEEDED)`` instead of burning
+another replica on a result nobody can use.
+
+Replicas are data-parallel copies of the serving function; when a
 ``repro.dist`` mesh is active their input batches are placed through
 ``dist.shardings.batch_shardings`` so the same partitioning rules that
 lay out training batches lay out serving batches.
@@ -11,10 +21,14 @@ lay out training batches lay out serving batches.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
+
+from .clock import SystemClock
+from .sched import RejectReason, RequestRejected
 
 
 class AllReplicasDown(RuntimeError):
@@ -29,18 +43,26 @@ class Replica:
     inflight: int = 0
     served: int = 0
     failures: int = 0
+    ewma_us: float = 0.0            # smoothed per-batch execution time
 
 
 class ReplicaSet:
     """Dispatch policy over replica callables (``policy``: ``"rr"`` |
-    ``"least_loaded"``)."""
+    ``"least_loaded"`` | ``"least_slack"``)."""
 
-    def __init__(self, fns: Sequence[Callable], policy: str = "rr"):
-        if policy not in ("rr", "least_loaded"):
+    def __init__(self, fns: Sequence[Callable], policy: str = "rr",
+                 clock=None, n_features: Optional[int] = None):
+        if policy not in ("rr", "least_loaded", "least_slack"):
             raise ValueError(f"unknown dispatch policy {policy!r}")
         assert len(fns) >= 1
         self.replicas = [Replica(fn=f, rid=i) for i, f in enumerate(fns)]
         self.policy = policy
+        self.clock = clock or SystemClock()
+        if n_features is None:      # propagate the width admission check
+            n_features = next(
+                (getattr(f, "n_features") for f in fns
+                 if getattr(f, "n_features", None) is not None), None)
+        self.n_features = n_features
         self._rr = 0
         self._lock = threading.Lock()
 
@@ -51,6 +73,12 @@ class ReplicaSet:
                 return None
             if self.policy == "least_loaded":
                 r = min(healthy, key=lambda r: (r.inflight, r.rid))
+            elif self.policy == "least_slack":
+                # expected completion = queued-behind work x smoothed
+                # exec time; the replica minimizing it eats the least of
+                # the batch's remaining deadline budget
+                r = min(healthy, key=lambda r: ((r.inflight + 1) * r.ewma_us,
+                                                r.inflight, r.rid))
             else:
                 r = healthy[self._rr % len(healthy)]
                 self._rr += 1
@@ -65,19 +93,35 @@ class ReplicaSet:
         with self._lock:
             self.replicas[rid].healthy = True
 
-    def __call__(self, x: np.ndarray) -> np.ndarray:
+    def __call__(self, x: np.ndarray,
+                 deadline_us: Optional[float] = None) -> np.ndarray:
         """Run one batch with failover: a raising replica is marked down
-        and the batch retried elsewhere."""
+        and the batch retried elsewhere — unless ``deadline_us`` (the
+        batch's tightest absolute deadline) has already passed, in which
+        case the retry is shed with a typed reject."""
         last_exc: Optional[BaseException] = None
-        for _ in range(len(self.replicas)):
+        for attempt in range(len(self.replicas)):
+            if (attempt > 0 and deadline_us is not None
+                    and math.isfinite(deadline_us)
+                    and self.clock.now_us() > deadline_us):
+                # failover budget re-stamp: the failed attempt consumed
+                # the whole budget — reject instead of serving late
+                raise RequestRejected(
+                    RejectReason.DEADLINE_EXCEEDED,
+                    f"budget exhausted during failover (attempt "
+                    f"{attempt + 1})") from last_exc
             r = self._pick()
             if r is None:
                 break
+            t0 = self.clock.now_us()
             try:
                 out = r.fn(x)
+                dt = self.clock.now_us() - t0
                 with self._lock:
                     r.inflight -= 1
                     r.served += 1
+                    r.ewma_us = (dt if r.served == 1
+                                 else 0.8 * r.ewma_us + 0.2 * dt)
                 return out
             except Exception as e:
                 last_exc = e
@@ -92,7 +136,8 @@ class ReplicaSet:
     def stats(self) -> List[dict]:
         with self._lock:
             return [{"rid": r.rid, "healthy": r.healthy, "served": r.served,
-                     "failures": r.failures, "inflight": r.inflight}
+                     "failures": r.failures, "inflight": r.inflight,
+                     "ewma_us": r.ewma_us}
                     for r in self.replicas]
 
 
@@ -117,6 +162,7 @@ def mesh_placed(fn: Callable, mesh) -> Callable:
             mesh, jax.ShapeDtypeStruct(arr.shape, arr.dtype))
         return np.asarray(fn(jax.device_put(arr, sh)))
 
+    placed.n_features = getattr(fn, "n_features", None)
     return placed
 
 
@@ -139,4 +185,4 @@ def build_logic_replicas(net, n_classes: int, n_replicas: int = 1,
         eng = LogicEngine(net, n_classes, max_batch=max_batch,
                           backend=backend, engine=engine)
         fns.append(mesh_placed(eng.scheduler_executor(), mesh))
-    return ReplicaSet(fns, policy=policy)
+    return ReplicaSet(fns, policy=policy, n_features=net.n_inputs)

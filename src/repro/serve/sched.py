@@ -2,28 +2,48 @@
 
 The core is a deterministic discrete-event engine: ``submit`` enqueues
 into bounded priority lanes (typed reject on overflow), ``poll`` forms
-and executes batches — flush when ``max_batch`` rows are waiting or the
-oldest request has aged past ``max_wait_us``, whichever comes first.
-Nothing inside reads wall time except through the injected clock, so a
-``FakeClock`` test steps the exact same code path production runs.
+and executes batches — flush when ``max_batch`` rows are waiting, when
+the oldest request has aged past ``max_wait_us``, or when the tightest
+SLO deadline in the queue can no longer absorb further fill-wait,
+whichever comes first. Nothing inside reads wall time except through
+the injected clock, so a ``FakeClock`` test steps the exact same code
+path production runs.
+
+Deadlines are first-class: every request carries an absolute
+``deadline_us`` (explicit per-request budget, or defaulted from the
+per-lane SLO table ``SchedConfig.lane_slo_us`` — e.g. lane 0 = 100 µs,
+lane 1 = 1 ms). Batch formation is earliest-deadline-first within each
+priority lane, and a request that is already past its deadline is
+*shed*: its future fails with a typed
+``RequestRejected(DEADLINE_EXCEEDED)`` instead of silently riding a
+late batch — under overload the paper's fixed-latency story demands a
+fast "no" over a slow "yes".
 
 Two drivers sit on top of the core:
   * synchronous — ``poll``/``drain`` called by the owner (tests, the
     ``serve_queue`` compatibility wrapper, simulated loadgen);
   * threaded — ``start()`` spawns a flush loop that sleeps until the
-    next deadline and wakes on submit (real-time open-loop serving).
+    earliest flush obligation (SLO deadline or age cap) and wakes on
+    submit (real-time open-loop serving).
 
 The executor contract is one callable ``(B, ...) -> (B,)``: it receives
 the concatenated rows of every request in the batch and returns one
-result row per input row. ``repro.serve.aggregate.BitplaneAggregator``
-and ``repro.serve.replica.ReplicaSet`` both satisfy it.
+result row per input row. Executors may additionally accept a
+``deadline_us`` keyword (the tightest absolute deadline in the batch;
+detected by signature inspection) and may expose ``n_features`` so
+admission can reject wrong-width payloads before they poison a batch.
+``repro.serve.aggregate.BitplaneAggregator`` and
+``repro.serve.replica.ReplicaSet`` both satisfy the extended contract.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
+import inspect
+import math
 import threading
-from collections import deque
-from typing import Callable, Deque, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,6 +60,8 @@ class RejectReason:
     SHUTDOWN = "shutdown"
     TOO_LARGE = "too_large"
     BAD_PRIORITY = "bad_priority"
+    BAD_SHAPE = "bad_shape"
+    DEADLINE_EXCEEDED = "deadline_exceeded"
 
 
 class RequestRejected(RuntimeError):
@@ -91,6 +113,13 @@ class ServeRequest:
     priority: int
     t_enqueue_us: float
     future: ServeFuture
+    deadline_us: float = math.inf   # absolute SLO deadline (inf = none)
+    seq: int = 0                    # admission order (EDF tie-break)
+    queued: bool = False            # live in a BoundedPriorityQueue lane
+
+    def slack_us(self, now_us: float) -> float:
+        """Remaining budget; negative once the deadline has passed."""
+        return self.deadline_us - now_us
 
 
 # ---------------------------------------------------------------------------
@@ -98,20 +127,28 @@ class ServeRequest:
 # ---------------------------------------------------------------------------
 
 class BoundedPriorityQueue:
-    """FIFO-within-lane priority queue with bounded total occupancy.
+    """EDF-within-lane priority queue with bounded total occupancy.
 
-    Lane 0 is the highest priority. ``push`` raises ``RequestRejected``
-    instead of blocking — backpressure is the caller's signal to shed
-    load, the serving analogue of the paper's fixed-capacity fabric.
+    Lane 0 is the highest priority. Within a lane, requests are held in
+    earliest-deadline-first order (ties broken by admission order, so
+    deadline-free traffic stays FIFO). ``push`` raises
+    ``RequestRejected`` instead of blocking — backpressure is the
+    caller's signal to shed load, the serving analogue of the paper's
+    fixed-capacity fabric.
     """
 
     def __init__(self, max_queue: int, n_priorities: int = 2):
         assert n_priorities >= 1
         self.max_queue = max_queue
-        self.lanes: List[Deque[ServeRequest]] = [
-            deque() for _ in range(n_priorities)]
+        self.lanes: List[List[ServeRequest]] = [
+            [] for _ in range(n_priorities)]
         self._len = 0
         self._rows = 0
+        self._seq = 0
+        # min-heap of (t_enqueue_us, seq, req) with lazy deletion (dead
+        # entries skipped via req.queued), so the oldest-arrival peek
+        # stays O(log n) amortized while lanes hold EDF order
+        self._arrivals: List[Tuple[float, int, ServeRequest]] = []
 
     def __len__(self) -> int:
         return self._len
@@ -129,27 +166,69 @@ class BoundedPriorityQueue:
             raise RequestRejected(
                 RejectReason.QUEUE_FULL,
                 f"{self._len} requests already queued (max {self.max_queue})")
-        self.lanes[req.priority].append(req)
+        req.seq = self._seq
+        self._seq += 1
+        bisect.insort(self.lanes[req.priority], req,
+                      key=lambda r: (r.deadline_us, r.seq))
+        req.queued = True
+        heapq.heappush(self._arrivals, (req.t_enqueue_us, req.seq, req))
         self._len += 1
         self._rows += req.rows
 
+    def _unlink(self, lane: List[ServeRequest], idx: int) -> ServeRequest:
+        req = lane.pop(idx)
+        req.queued = False
+        self._len -= 1
+        self._rows -= req.rows
+        return req
+
     def oldest_enqueue_us(self) -> Optional[float]:
-        ts = [lane[0].t_enqueue_us for lane in self.lanes if lane]
-        return min(ts) if ts else None
+        h = self._arrivals
+        while h and not h[0][2].queued:     # lazy-delete popped requests
+            heapq.heappop(h)
+        return h[0][0] if h else None
+
+    def earliest_flush_us(self, max_wait_us: float,
+                          margin_us: float = 0.0) -> Optional[float]:
+        """Earliest instant any queued request must be dispatched: the
+        oldest arrival's age cap (``t_enqueue + max_wait_us``) or the
+        tightest SLO deadline minus ``margin_us`` (the execution-time
+        estimate — the last moment a flush can still complete in
+        budget), whichever is sooner. None when idle. O(lanes) plus the
+        amortized arrival-heap peek — lanes are EDF-sorted, so each
+        lane's tightest deadline is its head."""
+        oldest = self.oldest_enqueue_us()
+        if oldest is None:
+            return None
+        best = oldest + max_wait_us
+        for lane in self.lanes:
+            if lane and math.isfinite(lane[0].deadline_us):
+                best = min(best, lane[0].deadline_us - margin_us)
+        return best
+
+    def shed_expired(self, now_us: float) -> List[ServeRequest]:
+        """Remove and return every request already past its deadline.
+
+        EDF order puts expired requests at the front of each lane, so
+        this is a prefix pop per lane."""
+        out: List[ServeRequest] = []
+        for lane in self.lanes:
+            while lane and now_us > lane[0].deadline_us:
+                out.append(self._unlink(lane, 0))
+        return out
 
     def pop_batch(self, max_rows: int) -> List[ServeRequest]:
-        """Highest-priority-first batch of whole requests, up to
-        ``max_rows`` total rows; stops at the first head-of-line request
-        that does not fit (no within-lane reordering)."""
+        """Highest-priority-first batch of whole requests, EDF within
+        each lane, up to ``max_rows`` total rows; stops at the first
+        head-of-line request that does not fit (no within-lane
+        reordering past the deadline order)."""
         out: List[ServeRequest] = []
         rows = 0
         for lane in self.lanes:
             while lane and rows + lane[0].rows <= max_rows:
-                req = lane.popleft()
+                req = self._unlink(lane, 0)
                 out.append(req)
                 rows += req.rows
-                self._len -= 1
-                self._rows -= req.rows
             if lane and out and rows + lane[0].rows > max_rows:
                 break
         return out
@@ -159,6 +238,9 @@ class BoundedPriorityQueue:
         for lane in self.lanes:
             out.extend(lane)
             lane.clear()
+        for req in out:
+            req.queued = False
+        self._arrivals.clear()
         self._len = 0
         self._rows = 0
         return out
@@ -174,14 +256,29 @@ class SchedConfig:
     max_wait_us: float = 200.0    # ... or when the oldest waits this long
     max_queue: int = 4096         # admission bound, in requests
     n_priorities: int = 2
+    # Per-lane SLO table: lane i's default deadline budget (µs from
+    # enqueue), e.g. (100.0, 1000.0) = lane 0 must complete in 100 µs,
+    # lane 1 in 1 ms. None (or a missing lane entry) = no deadline;
+    # an explicit ``submit(..., deadline_us=...)`` always wins.
+    lane_slo_us: Optional[Tuple[float, ...]] = None
+
+    def slo_for_lane(self, lane: int) -> float:
+        if self.lane_slo_us is None or lane >= len(self.lane_slo_us):
+            return math.inf
+        return float(self.lane_slo_us[lane])
 
 
 class MicroBatchScheduler:
-    """Deadline-based micro-batching over an executor callable.
+    """Deadline-aware micro-batching over an executor callable.
 
     ``executor(x_batch) -> results`` is called with the row-concatenated
     payloads of a batch; results are scattered back to each request's
-    future, stamped with true enqueue→complete latency.
+    future, stamped with true enqueue→complete latency. Executors that
+    accept a ``deadline_us`` keyword receive the tightest absolute
+    deadline in the batch (least-slack replica dispatch, failover
+    budget re-stamping); executors exposing ``n_features`` get
+    wrong-width payloads rejected at admission instead of poisoning a
+    whole batch.
     """
 
     def __init__(self, executor: Callable[[np.ndarray], Sequence],
@@ -197,14 +294,32 @@ class MicroBatchScheduler:
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
         self._shutdown = False
+        self._exec_ewma_us = 0.0        # smoothed batch execution time
+        self._n_execs = 0
+        self._n_features = getattr(executor, "n_features", None)
+        try:
+            params = inspect.signature(executor).parameters
+            self._pass_deadline = "deadline_us" in params
+        except (TypeError, ValueError):
+            self._pass_deadline = False
 
     # -- admission ---------------------------------------------------------
-    def submit(self, x, priority: int = 0) -> ServeFuture:
+    def _payload_width(self, x: np.ndarray) -> int:
+        return 1 if x.ndim == 0 else int(x.shape[-1])
+
+    def submit(self, x, priority: int = 0,
+               deadline_us: Optional[float] = None) -> ServeFuture:
         """Admit one request (a single sample or a (B, ...) row block).
 
+        ``deadline_us`` is the request's latency budget in µs *from
+        enqueue* (its absolute deadline is ``now + deadline_us``); when
+        omitted, the lane's ``SchedConfig.lane_slo_us`` entry applies
+        (no deadline if the table is unset).
+
         Raises ``RequestRejected`` — typed, never blocks — when the
-        queue is full, the payload exceeds one batch, or the scheduler
-        is shut down.
+        queue is full, the payload exceeds one batch or has the wrong
+        feature width, the budget is already spent, or the scheduler is
+        shut down.
         """
         x = np.asarray(x)
         rows = 1 if x.ndim <= 1 else x.shape[0]
@@ -213,53 +328,96 @@ class MicroBatchScheduler:
             raise RequestRejected(
                 RejectReason.TOO_LARGE,
                 f"{rows} rows > max_batch {self.cfg.max_batch}")
+        if x.ndim > 2:
+            self.metrics.record_reject(RejectReason.BAD_SHAPE)
+            raise RequestRejected(
+                RejectReason.BAD_SHAPE,
+                f"payload rank {x.ndim} > 2 (want (features,) or "
+                f"(rows, features))")
+        budget = (self.cfg.slo_for_lane(priority)
+                  if deadline_us is None else float(deadline_us))
+        if budget <= 0:
+            self.metrics.record_reject(RejectReason.DEADLINE_EXCEEDED)
+            raise RequestRejected(
+                RejectReason.DEADLINE_EXCEEDED,
+                f"non-positive deadline budget {budget} µs")
+        width = self._payload_width(x)
         fut = ServeFuture()
         now = self.clock.now_us()
         fut.t_enqueue_us = now
         req = ServeRequest(x=x, rows=rows, priority=priority,
-                           t_enqueue_us=now, future=fut)
+                           t_enqueue_us=now, future=fut,
+                           deadline_us=now + budget)
         with self._cond:
             if self._shutdown:
                 self.metrics.record_reject(RejectReason.SHUTDOWN)
                 raise RequestRejected(RejectReason.SHUTDOWN)
+            # width check + first-payload pinning share the lock, so two
+            # concurrent first submits cannot both pass with different
+            # widths and poison the same batch's concatenation
+            if self._n_features is not None and width != self._n_features:
+                self.metrics.record_reject(RejectReason.BAD_SHAPE)
+                raise RequestRejected(
+                    RejectReason.BAD_SHAPE,
+                    f"payload width {width} != executor width "
+                    f"{self._n_features}")
             try:
                 self.queue.push(req)
             except RequestRejected as e:
                 self.metrics.record_reject(e.reason)
                 raise
+            if self._n_features is None and x.ndim > 0:
+                self._n_features = width
             self.metrics.record_enqueue(len(self.queue), now)
             self._cond.notify_all()
         return fut
 
     # -- event engine ------------------------------------------------------
     def next_deadline_us(self) -> Optional[float]:
-        """When the oldest queued request must flush (None if idle)."""
+        """Earliest instant a flush is owed: the tightest queued SLO
+        deadline (minus the batch-execution estimate) or the oldest
+        request's ``max_wait_us`` age cap (None if idle)."""
         with self._cond:
-            oldest = self.queue.oldest_enqueue_us()
-        if oldest is None:
-            return None
-        return oldest + self.cfg.max_wait_us
+            return self.queue.earliest_flush_us(self.cfg.max_wait_us,
+                                                self._exec_ewma_us)
 
-    def _due_batch(self, now_us: float,
-                   force: bool) -> List[ServeRequest]:
+    def _shed(self, expired: List[ServeRequest], now_us: float) -> None:
+        for r in expired:
+            r.future.t_done_us = now_us
+            self.metrics.record_shed(r.priority)
+            r.future.set_exception(RequestRejected(
+                RejectReason.DEADLINE_EXCEEDED,
+                f"deadline missed by {now_us - r.deadline_us:.1f} µs "
+                f"before dispatch (lane {r.priority})"))
+
+    def _due_batch(self, now_us: float, force: bool
+                   ) -> Tuple[List[ServeRequest], List[ServeRequest]]:
+        """(expired-to-shed, batch-to-run) at ``now_us``. Expired
+        requests are always removed — on the forced shutdown drain too,
+        a late result is still a wrong result."""
         with self._cond:
+            expired = self.queue.shed_expired(now_us)
             if len(self.queue) == 0:
-                return []
+                return expired, []
             full = self.queue.rows >= self.cfg.max_batch
-            oldest = self.queue.oldest_enqueue_us()
-            aged = oldest is not None and (
-                now_us - oldest >= self.cfg.max_wait_us)
-            if not (full or aged or force):
-                return []
-            return self.queue.pop_batch(self.cfg.max_batch)
+            flush_at = self.queue.earliest_flush_us(self.cfg.max_wait_us,
+                                                    self._exec_ewma_us)
+            due = flush_at is not None and now_us >= flush_at
+            if not (full or due or force):
+                return expired, []
+            return expired, self.queue.pop_batch(self.cfg.max_batch)
 
     def _run_batch(self, batch: List[ServeRequest]) -> None:
         rows = sum(r.rows for r in batch)
         xs = [r.x if r.x.ndim > 1 else r.x[None] for r in batch]
         xcat = np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
+        tightest = min(r.deadline_us for r in batch)
         t0 = self.clock.now_us()
         try:
-            res = self.executor(xcat)
+            if self._pass_deadline:
+                res = self.executor(xcat, deadline_us=tightest)
+            else:
+                res = self.executor(xcat)
         except Exception as e:              # fail the whole batch, keep serving
             now = self.clock.now_us()
             self.metrics.record_error(len(batch))
@@ -269,6 +427,10 @@ class MicroBatchScheduler:
             return
         now = self.clock.now_us()
         self.metrics.record_batch(rows, now - t0)
+        dt = now - t0
+        self._n_execs += 1
+        self._exec_ewma_us = (dt if self._n_execs == 1
+                              else 0.8 * self._exec_ewma_us + 0.2 * dt)
         res = np.asarray(res)
         assert res.shape[0] == rows, (
             f"executor returned {res.shape[0]} rows for a {rows}-row batch")
@@ -277,24 +439,32 @@ class MicroBatchScheduler:
             out = res[off: off + r.rows]
             off += r.rows
             r.future.t_done_us = now
-            self.metrics.record_done(now - r.t_enqueue_us, now)
+            self.metrics.record_done(now - r.t_enqueue_us, now,
+                                     lane=r.priority,
+                                     deadline_us=r.deadline_us)
             r.future.set_result(out[0] if r.x.ndim <= 1 else out)
 
     def poll(self, now_us: Optional[float] = None, force: bool = False) -> int:
         """Run every batch due at ``now_us`` (clock-now if omitted);
         ``force`` flushes regardless of deadlines. Returns requests
-        resolved — completed or failed with the executor's error."""
+        resolved — completed, shed past-deadline, or failed with the
+        executor's error."""
         done = 0
         while True:
             now = self.clock.now_us() if now_us is None else now_us
-            batch = self._due_batch(now, force)
+            expired, batch = self._due_batch(now, force)
+            self._shed(expired, now)
+            done += len(expired)
             if not batch:
+                if expired:
+                    continue        # shedding may have exposed a due batch
                 return done
             self._run_batch(batch)
             done += len(batch)
 
     def drain(self) -> int:
-        """Synchronously flush everything queued (partial batches too)."""
+        """Synchronously flush everything queued (partial batches too);
+        already-expired requests are shed, not served late."""
         return self.poll(force=True)
 
     def pending(self) -> int:
@@ -319,24 +489,41 @@ class MicroBatchScheduler:
                     return
                 now = self.clock.now_us()
                 full = self.queue.rows >= self.cfg.max_batch
-                oldest = self.queue.oldest_enqueue_us()
-                wait_us = (0.0 if full or oldest is None or self._stopping
-                           else (oldest + self.cfg.max_wait_us) - now)
+                flush_at = self.queue.earliest_flush_us(
+                    self.cfg.max_wait_us, self._exec_ewma_us)
+                wait_us = (0.0 if full or flush_at is None or self._stopping
+                           else flush_at - now)
                 if wait_us > 0:
                     self._cond.wait(timeout=wait_us * 1e-6)
                     continue
             self.poll(force=self._stopping)
 
     def stop(self, drain: bool = True) -> None:
-        """Stop the driver thread; by default flush what is queued first,
-        then reject all further submissions."""
+        """Stop the driver thread, reject all further submissions, then
+        resolve what is queued (flush by default, typed shutdown-reject
+        with ``drain=False``).
+
+        Shutdown is latched *before* the final flush: a submit racing
+        with ``stop`` gets a typed ``RequestRejected(SHUTDOWN)`` instead
+        of being accepted into a queue nobody will ever serve again (the
+        old order accepted it after the drain and its future hung
+        forever).
+        """
         with self._cond:
             self._stopping = True
             self._cond.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=30)
             self._thread = None
+        with self._cond:
+            self._shutdown = True       # latch before the final flush
         if drain:
             self.drain()
+        now = self.clock.now_us()
         with self._cond:
-            self._shutdown = True
+            leftovers = self.queue.pop_all()
+        for r in leftovers:             # drain=False (or raced remnants)
+            r.future.t_done_us = now
+            self.metrics.record_reject(RejectReason.SHUTDOWN)
+            r.future.set_exception(RequestRejected(
+                RejectReason.SHUTDOWN, "scheduler stopped before dispatch"))

@@ -108,13 +108,23 @@ class LogicEngine:
         The bitplane backend aggregates the batch's requests into uint32
         lanes and evaluates the mapped netlist once per pack
         (``repro.serve.aggregate``); the jit backends run one padded
-        evaluation. All three return identical argmaxes.
+        evaluation. All three return identical argmaxes. The executor
+        advertises ``n_features`` so the scheduler rejects wrong-width
+        payloads at admission (typed ``BAD_SHAPE``) instead of letting
+        one malformed request poison a whole batch.
         """
         if self.backend == "bitplane":
-            return self._fn
-        return self.exec_batch
+            return self._fn             # BitplaneAggregator: has n_features
 
-    def serve_queue(self, requests: List[np.ndarray], clock=None
+        def ex(x: np.ndarray) -> np.ndarray:
+            return self.exec_batch(x)
+
+        ex.n_features = self.net.n_inputs
+        return ex
+
+    def serve_queue(self, requests: List[np.ndarray], clock=None,
+                    deadline_us: Optional[float] = None,
+                    lane_slo_us: Optional[Tuple[float, ...]] = None
                     ) -> Tuple[List[np.ndarray], Dict[str, float]]:
         """Micro-batched serving of a request list; returns per-request
         results + latency stats (p50/p95/p99/mean, µs).
@@ -124,31 +134,53 @@ class LogicEngine:
         the reported latencies are true enqueue→complete times — a
         request stuck behind earlier batches shows its head-of-line
         wait, which the old per-call timing loop hid.
+
+        ``deadline_us`` gives every request that latency budget (µs from
+        enqueue); ``lane_slo_us`` installs the per-lane SLO table
+        instead. With either set, requests past their budget at flush
+        time are shed with a typed ``RequestRejected(DEADLINE_EXCEEDED)``
+        (a ``None`` in the results list) and the stats gain
+        ``deadline_miss_rate`` / ``shed``.
         """
-        from repro.serve import MicroBatchScheduler, SchedConfig
+        from repro.serve import (MicroBatchScheduler, RequestRejected,
+                                 SchedConfig)
 
         cfg = SchedConfig(max_batch=self.max_batch,
                           max_wait_us=self.max_wait_ms * 1e3,
                           max_queue=max(2 * len(requests), 1),
-                          n_priorities=1)
+                          n_priorities=1, lane_slo_us=lane_slo_us)
         sched = MicroBatchScheduler(self.scheduler_executor(), cfg,
                                     clock=clock)
         futs: List[Any] = []
         for r in requests:
             r = np.asarray(r)
             if r.ndim > 1 and r.shape[0] > self.max_batch:
-                futs.append([sched.submit(r[i: i + self.max_batch])
+                futs.append([sched.submit(r[i: i + self.max_batch],
+                                          deadline_us=deadline_us)
                              for i in range(0, r.shape[0], self.max_batch)])
             else:
-                futs.append(sched.submit(r))
+                futs.append(sched.submit(r, deadline_us=deadline_us))
         sched.drain()
-        results = [np.concatenate([np.asarray(p.result()) for p in f])
-                   if isinstance(f, list) else np.asarray(f.result())
-                   for f in futs]
+
+        def _res(f):
+            try:
+                return np.asarray(f.result())
+            except RequestRejected:
+                return None                 # shed past its deadline
+
+        results = []
+        for f in futs:
+            if isinstance(f, list):
+                parts = [_res(p) for p in f]
+                results.append(None if any(p is None for p in parts)
+                               else np.concatenate(parts))
+            else:
+                results.append(_res(f))
         snap = sched.metrics.snapshot()
         stats = {k: snap[k] for k in
                  ("p50_us", "p95_us", "p99_us", "mean_us", "qps",
-                  "mean_batch_occupancy", "n_batches")}
+                  "mean_batch_occupancy", "n_batches",
+                  "deadline_miss_rate", "shed")}
         return results, stats
 
 
@@ -202,20 +234,30 @@ class LMEngine:
             max_pending if max_pending is not None else (1 << 30),
             n_priorities)
 
-    def submit(self, req: LMRequest, priority: int = 0):
+    def submit(self, req: LMRequest, priority: int = 0,
+               deadline_us: Optional[float] = None):
         """Admit into the priority queue (typed reject when full).
+
+        ``deadline_us`` is a queueing budget (µs from enqueue): a
+        request still waiting for a decode slot past its budget is shed
+        with a typed ``RequestRejected(DEADLINE_EXCEEDED)`` on its
+        future instead of being admitted late.
 
         Returns the request's ``ServeFuture``: resolved with the
         finished ``LMRequest`` by ``run``, with enqueue→complete
         latency on ``fut.latency_us``.
         """
+        import math
+
         from repro.serve.sched import ServeFuture, ServeRequest
 
         fut = ServeFuture()
         fut.t_enqueue_us = time.perf_counter() * 1e6
         self.admission.push(ServeRequest(
             x=req, rows=1, priority=priority,
-            t_enqueue_us=fut.t_enqueue_us, future=fut))
+            t_enqueue_us=fut.t_enqueue_us, future=fut,
+            deadline_us=(fut.t_enqueue_us + deadline_us
+                         if deadline_us is not None else math.inf)))
         return fut
 
     @staticmethod
@@ -278,9 +320,20 @@ class LMEngine:
         """
         for r in requests:
             self.submit(r)
+        from repro.serve.sched import RejectReason, RequestRejected
+
         done: List[LMRequest] = []
         sreqs: List[Optional[Any]] = [None] * self.n_slots
         while len(self.admission) or any(a is not None for a in self.active):
+            # shed waiters whose queueing budget expired before a slot
+            # freed up — a typed reject beats a silently late admission
+            now_us = time.perf_counter() * 1e6
+            for expired in self.admission.shed_expired(now_us):
+                expired.future.t_done_us = now_us
+                expired.future.set_exception(RequestRejected(
+                    RejectReason.DEADLINE_EXCEEDED,
+                    f"expired {now_us - expired.deadline_us:.0f} µs before "
+                    f"a decode slot freed"))
             # admit, highest priority lane first
             for i in range(self.n_slots):
                 if self.active[i] is None and len(self.admission):

@@ -1,6 +1,7 @@
 """repro.serve: scheduler semantics under a fake clock, backpressure,
-priority lanes, replica failover, bitplane aggregation, and cross-backend
-bit-identity of scheduled results on JSC-S."""
+priority lanes, per-lane SLO deadlines (EDF formation, expiry shedding,
+miss-rate accounting), replica failover, bitplane aggregation, and
+cross-backend bit-identity of scheduled results on JSC-S."""
 import numpy as np
 import pytest
 
@@ -92,6 +93,238 @@ def test_shutdown_rejects_new_submissions():
     with pytest.raises(RequestRejected) as e:
         s.submit(np.ones(2))
     assert e.value.reason == RejectReason.SHUTDOWN
+
+
+# ---------------------------------------------------------------------------
+# Shutdown: stop/submit race + drain=False typed rejection
+# ---------------------------------------------------------------------------
+
+def test_stop_submit_race_rejected_not_hung():
+    """A submit racing with stop()'s final drain must get a typed
+    SHUTDOWN reject, not be accepted into a queue nobody serves (the
+    old order set _shutdown only *after* the drain, so the racing
+    request's future hung forever)."""
+    clk = FakeClock()
+    holder = {}
+
+    def ex(x):
+        # runs inside stop()'s final drain — exactly the race window
+        try:
+            holder["fut"] = s.submit(np.ones(2))
+        except RequestRejected as e:
+            holder["exc"] = e
+        return x.sum(axis=-1)
+
+    s = MicroBatchScheduler(ex, SchedConfig(max_batch=8), clock=clk)
+    f = s.submit(np.ones(2))
+    s.stop(drain=True)
+    assert "fut" not in holder, "racing submit was accepted and will hang"
+    assert holder["exc"].reason == RejectReason.SHUTDOWN
+    assert f.result(0) == 2.0            # pre-stop work still served
+
+
+def test_stop_without_drain_rejects_queued():
+    s = MicroBatchScheduler(_sum_executor([]), SchedConfig(),
+                            clock=FakeClock())
+    f = s.submit(np.ones(2))
+    s.stop(drain=False)
+    with pytest.raises(RequestRejected) as e:
+        f.result(0)                      # resolved, not hung
+    assert e.value.reason == RejectReason.SHUTDOWN
+
+
+# ---------------------------------------------------------------------------
+# Admission shape validation: one bad request must not poison a batch
+# ---------------------------------------------------------------------------
+
+def test_bad_shape_rejected_at_admission_batch_survives():
+    clk, log = FakeClock(), []
+
+    def ex(x):
+        log.append(x.shape[0])
+        return x.sum(axis=-1)
+
+    ex.n_features = 3
+    s = MicroBatchScheduler(ex, SchedConfig(max_batch=8), clock=clk)
+    good = [s.submit(np.ones(3)) for _ in range(2)]
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones((2, 4)))        # wrong width: would break concat
+    assert e.value.reason == RejectReason.BAD_SHAPE
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones((2, 2, 3)))     # wrong rank
+    assert e.value.reason == RejectReason.BAD_SHAPE
+    assert s.drain() == 2                # the good batch executes cleanly
+    assert [f.result(0) for f in good] == [3.0, 3.0]
+    assert s.metrics.snapshot()["rejected_by_reason"]["bad_shape"] == 2
+
+
+def test_width_pinned_from_first_request_without_executor_hint():
+    s = MicroBatchScheduler(_sum_executor([]), SchedConfig(),
+                            clock=FakeClock())
+    s.submit(np.ones(2))                 # pins batch width to 2
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones(5))
+    assert e.value.reason == RejectReason.BAD_SHAPE
+    assert s.drain() == 1
+
+
+# ---------------------------------------------------------------------------
+# Per-lane SLO deadlines: expiry shedding, EDF, miss-rate accounting
+# ---------------------------------------------------------------------------
+
+def test_deadline_expiry_shed_with_typed_reject():
+    clk, log = FakeClock(), []
+    s = MicroBatchScheduler(_sum_executor(log),
+                            SchedConfig(max_batch=8, max_wait_us=1e6,
+                                        n_priorities=1,
+                                        lane_slo_us=(100.0,)), clock=clk)
+    f = s.submit(np.ones(2))
+    clk.advance_us(150.0)                # past the lane-0 SLO
+    assert s.drain() == 1                # resolved by shedding, not served
+    assert log == []                     # never reached the executor
+    with pytest.raises(RequestRejected) as e:
+        f.result(0)
+    assert e.value.reason == RejectReason.DEADLINE_EXCEEDED
+    snap = s.metrics.snapshot()
+    assert snap["shed"] == 1 and snap["completed"] == 0
+    assert snap["deadline_miss_rate"] == 1.0
+    assert snap["lanes"]["0"]["shed"] == 1
+
+
+def test_explicit_deadline_overrides_lane_slo():
+    clk, log = FakeClock(), []
+    s = MicroBatchScheduler(_sum_executor(log),
+                            SchedConfig(max_batch=8, max_wait_us=1e6,
+                                        n_priorities=1,
+                                        lane_slo_us=(100.0,)), clock=clk)
+    f = s.submit(np.ones(2), deadline_us=500.0)
+    clk.advance_us(150.0)                # past the lane SLO, within budget
+    assert s.poll() == 0                 # not expired, not yet due
+    clk.advance_us(350.0)
+    assert s.poll() == 1                 # flushed at its own deadline
+    assert f.result(0) == 2.0
+
+
+def test_nonpositive_budget_rejected_at_admission():
+    s = MicroBatchScheduler(_sum_executor([]), SchedConfig(),
+                            clock=FakeClock())
+    with pytest.raises(RequestRejected) as e:
+        s.submit(np.ones(2), deadline_us=-5.0)
+    assert e.value.reason == RejectReason.DEADLINE_EXCEEDED
+
+
+def test_edf_ordering_within_lane_vs_fifo():
+    clk, order = FakeClock(), []
+
+    def ex(x):
+        order.extend(int(v) for v in x[:, 0])
+        return x[:, 0]
+
+    s = MicroBatchScheduler(ex, SchedConfig(max_batch=1, n_priorities=1),
+                            clock=clk)
+    s.submit(np.full((1, 1), 1.0), deadline_us=500.0)
+    s.submit(np.full((1, 1), 2.0), deadline_us=100.0)  # tighter, later
+    s.drain()
+    assert order == [2, 1]               # EDF, not arrival FIFO
+
+    order.clear()
+    s2 = MicroBatchScheduler(ex, SchedConfig(max_batch=1, n_priorities=1),
+                             clock=clk)
+    s2.submit(np.full((1, 1), 1.0))      # no deadlines: FIFO preserved
+    s2.submit(np.full((1, 1), 2.0))
+    s2.drain()
+    assert order == [1, 2]
+
+
+def test_per_lane_miss_rate_accounting():
+    clk = FakeClock()
+
+    def slow_ex(x):                      # execution outlives the tight SLO
+        clk.advance_us(150.0)
+        return x.sum(axis=-1)
+
+    s = MicroBatchScheduler(slow_ex,
+                            SchedConfig(max_batch=8, max_wait_us=1e6,
+                                        n_priorities=2,
+                                        lane_slo_us=(100.0, 10_000.0)),
+                            clock=clk)
+    tight = s.submit(np.ones(2), priority=0)
+    loose = s.submit(np.ones(2), priority=1)
+    assert s.drain() == 2
+    assert tight.result(0) == 2.0 and loose.result(0) == 2.0
+    snap = s.metrics.snapshot()
+    # lane 0 completed but 50 µs past its deadline: a served-late miss
+    assert snap["lanes"]["0"]["missed"] == 1
+    assert snap["lanes"]["0"]["deadline_miss_rate"] == 1.0
+    assert snap["lanes"]["1"]["missed"] == 0
+    assert snap["lanes"]["1"]["deadline_miss_rate"] == 0.0
+    assert snap["lanes"]["1"]["mean_slack_us"] == pytest.approx(9850.0)
+    # now an expiry shed on the tight lane joins the miss accounting
+    f = s.submit(np.ones(2), priority=0)
+    clk.advance_us(200.0)
+    s.drain()
+    with pytest.raises(RequestRejected):
+        f.result(0)
+    snap = s.metrics.snapshot()
+    assert snap["lanes"]["0"]["shed"] == 1
+    assert snap["deadline_miss_rate"] == pytest.approx(2 / 3)
+
+
+def test_next_deadline_wakes_on_slo_not_arrival_age():
+    clk = FakeClock(1000.0)
+    s = MicroBatchScheduler(_sum_executor([]),
+                            SchedConfig(max_wait_us=1e6, n_priorities=1,
+                                        lane_slo_us=(100.0,)), clock=clk)
+    assert s.next_deadline_us() is None
+    s.submit(np.ones(2))
+    assert s.next_deadline_us() == 1100.0    # the SLO, not enqueue+1e6
+
+    s2 = MicroBatchScheduler(_sum_executor([]),
+                             SchedConfig(max_wait_us=200.0), clock=clk)
+    s2.submit(np.ones(2))
+    assert s2.next_deadline_us() == 1200.0   # no SLO: arrival age cap
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware replica dispatch
+# ---------------------------------------------------------------------------
+
+def test_replica_failover_restamps_remaining_budget():
+    clk = FakeClock()
+
+    def crash_slowly(x):
+        clk.advance_us(200.0)            # the failure ate the whole budget
+        raise RuntimeError("replica crash")
+
+    rs = ReplicaSet([crash_slowly, lambda x: x.sum(axis=-1)], policy="rr",
+                    clock=clk)
+    with pytest.raises(RequestRejected) as e:
+        rs(np.ones((1, 2)), deadline_us=100.0)
+    assert e.value.reason == RejectReason.DEADLINE_EXCEEDED
+    # the healthy replica is still up: budget-free traffic flows on
+    np.testing.assert_allclose(rs(np.ones((1, 2))), [2.0])
+    assert [r["healthy"] for r in rs.stats()] == [False, True]
+
+
+def test_replica_failover_within_budget_still_retries():
+    clk = FakeClock()
+
+    def crash_fast(x):
+        clk.advance_us(10.0)
+        raise RuntimeError("replica crash")
+
+    rs = ReplicaSet([crash_fast, lambda x: x.sum(axis=-1)], policy="rr",
+                    clock=clk)
+    np.testing.assert_allclose(rs(np.ones((1, 2)), deadline_us=100.0), [2.0])
+
+
+def test_least_slack_policy_picks_smallest_expected_completion():
+    rs = ReplicaSet([lambda x: x, lambda x: x], policy="least_slack")
+    rs.replicas[0].ewma_us, rs.replicas[0].inflight = 100.0, 1
+    rs.replicas[1].ewma_us, rs.replicas[1].inflight = 300.0, 0
+    picked = rs._pick()                  # (1+1)*100 = 200 < (0+1)*300
+    assert picked.rid == 0
+    rs.replicas[0].inflight -= 1
 
 
 # ---------------------------------------------------------------------------
@@ -249,6 +482,22 @@ def test_bitplane_aggregator_packs_requests_into_lanes(jsc_small):
     n_wires = net.n_inputs * eng.bitnet.in_bits
     assert agg.pack_requests(xte[:40]).shape == (n_wires, 2)
     assert agg.mean_lane_occupancy == pytest.approx(40 / 64)
+
+
+def test_aggregator_occupancy_counts_real_rows_under_pad_rows(jsc_small):
+    from repro.serving.engine import LogicEngine
+    net, xte = jsc_small
+    eng = LogicEngine(net, 5, max_batch=64, backend="bitplane")
+    agg = BitplaneAggregator(eng.bitnet, 5, pad_rows=64)
+    got = agg(xte[:16])
+    np.testing.assert_array_equal(got, eng.classify(xte[:16]))
+    # 16 real rows in one lane-word: occupancy is 16/32, not deflated by
+    # the 48 shape-stability pad rows (which get their own counter)
+    assert agg.n_evals == 1 and agg.n_rows == 16
+    assert agg.mean_lane_occupancy == pytest.approx(16 / 32)
+    assert agg.n_pad_rows == 48
+    assert agg.n_partial_packs == 1
+    assert agg.n_features == net.n_inputs
 
 
 def test_serve_queue_wrapper_reports_true_latency(jsc_small):
