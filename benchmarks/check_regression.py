@@ -62,23 +62,50 @@ _THROUGHPUT_KEYS = (("qps", HIGHER), ("throughput_x_sequential", HIGHER))
 _SLO_KEYS = (("deadline_miss_rate", LOWER), ("slo_attainment", HIGHER))
 
 
+class BaselineError(Exception):
+    """A baseline exists but cannot be used (unparsable, or git itself
+    is unavailable). Distinct from a *missing* baseline, which is a
+    normal skip (new benchmark file); this one needs a human and fails
+    the run with an actionable message instead of a traceback."""
+
+
 def load_baseline(name: str, baseline_dir: Optional[str]) -> Optional[dict]:
     """Baseline JSON from a directory, or from the committed tree at
-    git HEAD when no directory is given."""
+    git HEAD when no directory is given.
+
+    Returns None when no baseline exists (legitimately skippable);
+    raises ``BaselineError`` when one exists but is unusable."""
     if baseline_dir:
         path = os.path.join(baseline_dir, name)
         if not os.path.exists(path):
             return None
-        with open(path) as f:
-            return json.load(f)
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except json.JSONDecodeError as e:
+            raise BaselineError(
+                f"baseline {path} is not valid JSON ({e}). Re-generate "
+                f"it (python benchmarks/run.py --fast) or remove it "
+                f"from --baseline-dir to skip this file.")
     try:
-        blob = subprocess.run(
-            ["git", "show", f"HEAD:{name}"], cwd=REPO_ROOT,
-            capture_output=True, check=True).stdout
-        return json.loads(blob)
-    except (subprocess.CalledProcessError, json.JSONDecodeError,
-            FileNotFoundError):
+        proc = subprocess.run(["git", "show", f"HEAD:{name}"],
+                              cwd=REPO_ROOT, capture_output=True)
+    except FileNotFoundError:
+        raise BaselineError(
+            "git is not available, so baselines at HEAD cannot be read. "
+            "Pass --baseline-dir pointing at a directory of committed "
+            "BENCH_*.json files instead.")
+    if proc.returncode != 0:
+        # not in the committed tree: a brand-new benchmark file
         return None
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError as e:
+        raise BaselineError(
+            f"baseline {name} at git HEAD is not valid JSON ({e}). The "
+            f"committed file is corrupt — re-run the benchmark "
+            f"(python benchmarks/run.py --fast) and commit a valid "
+            f"{name}, or pass --baseline-dir with a good copy.")
 
 
 def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
@@ -235,12 +262,24 @@ def main(argv=None) -> int:
         if not os.path.exists(fresh_path):
             print(f"[regress] {name}: no fresh file — skipped")
             continue
-        with open(fresh_path) as f:
-            fresh_doc = json.load(f)
-        base_doc = load_baseline(name, args.baseline_dir)
+        try:
+            with open(fresh_path) as f:
+                fresh_doc = json.load(f)
+        except json.JSONDecodeError as e:
+            print(f"[regress] ERROR: fresh file {fresh_path} is not "
+                  f"valid JSON ({e}). The benchmark step that writes it "
+                  f"likely crashed mid-write — re-run it before the "
+                  f"regression gate.")
+            return 2
+        try:
+            base_doc = load_baseline(name, args.baseline_dir)
+        except BaselineError as e:
+            print(f"[regress] ERROR: {e}")
+            return 2
         if base_doc is None:
-            print(f"[regress] {name}: no baseline — skipped "
-                  f"(new benchmark file?)")
+            print(f"[regress] {name}: no baseline at "
+                  f"{'HEAD' if not args.baseline_dir else args.baseline_dir}"
+                  f" — skipped (new benchmark file?)")
             continue
         regs, checked, only_one, drift = compare(
             extract_metrics(base_doc), extract_metrics(fresh_doc),

@@ -1,0 +1,43 @@
+"""repro.check — static analysis and verification for the synth->serve
+stack.
+
+Four passes, all runnable via ``python -m repro.check``:
+
+  1. **netlist lint** (``netlist_lint``) — structural invariants of the
+     AIG and the mapped k-LUT netlist;
+  2. **equivalence** (``equiv``) — miter-style functional equivalence
+     between adjacent pipeline stages, exhaustive up to ~20 inputs,
+     counterexample-reporting beyond;
+  3. **device-plan validation** (``plan_check``) — shape/dtype/index/
+     VMEM contracts of ``DevicePlan`` tensors, cached by plan hash;
+  4. **concurrency lint** (``concurrency``) — AST lock-discipline and
+     reject-reason coverage over ``repro.serve``.
+
+``pipeline.check_synth_pipeline`` chains 1–3 over a real synthesis run;
+``pipeline.preflight`` is the serving-startup subset behind
+``python -m repro.launch.serve --check``.
+"""
+from .concurrency import check_concurrency
+from .equiv import (equiv_aig_mapped, equiv_aigs, equiv_cover_aig,
+                    equiv_mapped_plan, equiv_network_mapped,
+                    execute_plan_host, miter)
+from .netlist_lint import lint_aig, lint_mapped
+from .pipeline import (check_sop_stage, check_static, check_synth_pipeline,
+                       preflight, verify_plan, verify_synthesis)
+from .plan_check import (DEFAULT_VMEM_BUDGET, estimate_vmem_bytes,
+                         plan_fingerprint, validate_device_plan)
+from .report import (Counterexample, CheckFailure, CheckReport, Issue,
+                     require_ok)
+from .srclint import check_duplicate_definitions
+
+__all__ = [
+    "CheckFailure", "CheckReport", "Counterexample", "Issue",
+    "DEFAULT_VMEM_BUDGET",
+    "check_concurrency", "check_duplicate_definitions", "check_sop_stage",
+    "check_static", "check_synth_pipeline",
+    "equiv_aig_mapped", "equiv_aigs", "equiv_cover_aig",
+    "equiv_mapped_plan", "equiv_network_mapped", "execute_plan_host",
+    "estimate_vmem_bytes", "lint_aig", "lint_mapped", "miter",
+    "plan_fingerprint", "preflight", "require_ok",
+    "validate_device_plan", "verify_plan", "verify_synthesis",
+]

@@ -1,0 +1,103 @@
+"""``python -m repro.check`` — run the static-analysis passes.
+
+By default trains a tiny JSC-S model, compiles it to logic, and runs
+every pass (netlist lint, stage equivalence, device-plan validation)
+over the real pipeline, plus the source-level passes (concurrency
+lint, duplicate-definition watchlist). ``--fast`` shrinks the training
+run and vector counts so the whole thing fits a CI minute; ``--static``
+skips the model entirely.
+
+Exit status: 0 = all passes clean, 1 = errors found.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .pipeline import check_synth_pipeline
+from .plan_check import DEFAULT_VMEM_BUDGET
+from .report import CheckReport
+
+PASS_CHOICES = ("lint", "equiv", "plan", "concurrency", "srclint")
+
+
+def _build_jsc(fast: bool, seed: int):
+    from repro.configs.jsc import JSC_S
+    from repro.data.jsc import train_test
+    from repro.models.mlp import to_logic
+    from repro.train.jsc_trainer import train_jsc
+
+    n_train, n_test = (2000, 500) if fast else (3000, 800)
+    steps = 100 if fast else 200
+    data = train_test(n_train, n_test, seed=seed)
+    res = train_jsc(JSC_S, steps=steps, batch=128, data=data)
+    return to_logic(JSC_S, res.params, res.masks, res.bn_state)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="Static netlist verification, device-plan validation "
+                    "and concurrency lint for the synth->serve stack.")
+    ap.add_argument("--fast", action="store_true",
+                    help="small training run + fewer miter vectors "
+                    "(CI budget, < ~60 s)")
+    ap.add_argument("--static", action="store_true",
+                    help="source-level passes only (no model training)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of: "
+                    + ",".join(PASS_CHOICES))
+    ap.add_argument("--effort", type=int, default=1,
+                    help="rewrite/balance rounds before mapping")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vmem-budget-mb", type=float, default=None,
+                    help="device-plan VMEM budget (default "
+                    f"{DEFAULT_VMEM_BUDGET / 2**20:.0f} MiB)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="show warnings, not just errors")
+    args = ap.parse_args(argv)
+
+    wanted = (set(p.strip() for p in args.passes.split(","))
+              if args.passes else set(PASS_CHOICES))
+    bad = wanted - set(PASS_CHOICES)
+    if bad:
+        ap.error(f"unknown pass(es): {', '.join(sorted(bad))}")
+
+    budget = (DEFAULT_VMEM_BUDGET if args.vmem_budget_mb is None
+              else int(args.vmem_budget_mb * 2**20))
+    t0 = time.time()
+    reports = []
+
+    if wanted & {"concurrency", "srclint"}:
+        static = CheckReport("static")
+        if "concurrency" in wanted:
+            from .concurrency import check_concurrency
+            static.merge(check_concurrency())
+        if "srclint" in wanted:
+            from .srclint import check_duplicate_definitions
+            static.merge(check_duplicate_definitions())
+        reports.append(static)
+
+    if not args.static and wanted & {"lint", "equiv", "plan"}:
+        print("[check] building JSC-S artifacts "
+              f"({'fast' if args.fast else 'full'}) ...", flush=True)
+        net = _build_jsc(args.fast, args.seed)
+        rep = check_synth_pipeline(net=net, effort=args.effort,
+                                   fast=args.fast,
+                                   vmem_budget_bytes=budget,
+                                   seed=args.seed)
+        if wanted != set(PASS_CHOICES):
+            rep.issues = [i for i in rep.issues if i.pass_name in wanted]
+        reports.append(rep)
+
+    ok = True
+    for rep in reports:
+        print(rep.format(verbose=args.verbose))
+        ok = ok and rep.ok
+    print(f"[check] {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f} s")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

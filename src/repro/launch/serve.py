@@ -34,7 +34,7 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                 use_pallas: bool, backend: str = "gather",
                 engine: str = "numpy", sched: bool = False,
                 replicas: int = 1, qps: float = None, loadgen: str = None,
-                slo_us: tuple = None):
+                slo_us: tuple = None, check: bool = False):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -55,6 +55,19 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
     if backend == "bitplane":
         print(f"  mapped: {eng.bitnet.mapped.n_luts} LUTs, "
               f"depth {eng.bitnet.mapped.depth}")
+    if check:
+        # preflight: refuse to serve a netlist that fails lint, plan
+        # validation, or the valid-code equivalence spot-check
+        from repro.check import preflight
+        if backend != "bitplane":
+            print("[serve] --check: nothing to verify for backend "
+                  f"{backend!r} (mapped-netlist checks need --backend "
+                  f"bitplane)")
+        else:
+            rep = preflight(eng.bitnet)
+            print(rep.format())
+            if not rep.ok:
+                raise SystemExit(2)
     (_, _), (xte, yte) = train_test()
 
     if loadgen:                         # full benchmark harness
@@ -178,6 +191,11 @@ def main(argv=None):
                          "µs (lane 0 first, e.g. '100,1000'); requests "
                          "past their lane budget are shed with a typed "
                          "DEADLINE_EXCEEDED reject")
+    ap.add_argument("--check", action="store_true",
+                    help="repro.check preflight before serving (bitplane "
+                         "backend): netlist lint, DevicePlan validation, "
+                         "mapped<->plan miter, valid-code equivalence; "
+                         "exit 2 on any error")
     args = ap.parse_args(argv)
     slo_us = (tuple(float(v) for v in args.slo_us.split(","))
               if args.slo_us else None)
@@ -185,7 +203,7 @@ def main(argv=None):
         serve_logic(args.jsc, args.train_steps, args.requests, args.pallas,
                     backend=args.backend, engine=args.engine,
                     sched=args.sched, replicas=args.replicas, qps=args.qps,
-                    loadgen=args.loadgen, slo_us=slo_us)
+                    loadgen=args.loadgen, slo_us=slo_us, check=args.check)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)
 

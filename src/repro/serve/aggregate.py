@@ -33,6 +33,11 @@ class BitplaneAggregator:
     Satisfies the ``MicroBatchScheduler`` executor contract
     ``(B, n_features) -> (B,)``; every 32 rows of the batch share one
     uint32 lane-word through the whole netlist.
+
+    Not thread-safe by design — the scheduler serializes executor calls
+    on one dispatch thread, so the ``n_*`` counters need no lock and
+    carry no ``_GUARDED_BY`` annotation. Wrap in ``ReplicaSet`` for
+    concurrent dispatch.
     """
 
     def __init__(self, bitnet: BitplaneNetwork, n_classes: int,

@@ -50,6 +50,10 @@ class ReplicaSet:
     """Dispatch policy over replica callables (``policy``: ``"rr"`` |
     ``"least_loaded"`` | ``"least_slack"``)."""
 
+    # enforced by repro.check's concurrency lint: the round-robin cursor
+    # is shared by every dispatching thread
+    _GUARDED_BY = {"_rr": "_lock"}
+
     def __init__(self, fns: Sequence[Callable], policy: str = "rr",
                  clock=None, n_features: Optional[int] = None):
         if policy not in ("rr", "least_loaded", "least_slack"):

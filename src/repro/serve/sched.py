@@ -281,6 +281,18 @@ class MicroBatchScheduler:
     whole batch.
     """
 
+    # lock-discipline contract, enforced by repro.check's concurrency
+    # lint: these fields may only be touched under ``with self._cond:``
+    # (outside __init__). _exec_ewma_us/_n_execs are deliberately not
+    # listed: they are written by whichever single thread drives poll()
+    # and only read under the lock as a flush-timing *estimate*, where a
+    # stale value is harmless.
+    _GUARDED_BY = {
+        "_stopping": "_cond",
+        "_shutdown": "_cond",
+        "_n_features": "_cond",
+    }
+
     def __init__(self, executor: Callable[[np.ndarray], Sequence],
                  cfg: Optional[SchedConfig] = None, clock=None,
                  metrics: Optional[ServeMetrics] = None):
@@ -474,7 +486,8 @@ class MicroBatchScheduler:
     # -- threaded driver ---------------------------------------------------
     def start(self) -> "MicroBatchScheduler":
         assert self._thread is None, "scheduler already started"
-        self._stopping = False
+        with self._cond:
+            self._stopping = False
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="microbatch-sched")
         self._thread.start()
@@ -496,7 +509,8 @@ class MicroBatchScheduler:
                 if wait_us > 0:
                     self._cond.wait(timeout=wait_us * 1e-6)
                     continue
-            self.poll(force=self._stopping)
+                stopping = self._stopping   # snapshot under the lock
+            self.poll(force=stopping)
 
     def stop(self, drain: bool = True) -> None:
         """Stop the driver thread, reject all further submissions, then

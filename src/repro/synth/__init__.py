@@ -24,21 +24,37 @@ from .simulate import (exhaustive_equiv, input_patterns, pack_bits,
                        random_equiv, random_words, simulate, unpack_bits)
 
 
-def synthesize(aig: AIG, effort: int = 1, k: int = 6) -> MappedNetwork:
+def synthesize(aig: AIG, effort: int = 1, k: int = 6,
+               verify: bool = False) -> MappedNetwork:
     """balance/rewrite rounds (``effort``; 0 = map the raw AIG) followed
-    by k-LUT mapping with area recovery."""
+    by k-LUT mapping with area recovery.
+
+    ``verify=True`` miters every transform against its input (rewrite
+    must preserve the function everywhere, the LUT cover must match the
+    optimized AIG everywhere) and raises ``repro.check.CheckFailure``
+    with a counterexample on any disagreement."""
+    raw = aig
     if effort > 0:
         aig = optimize(aig, rounds=effort)
-    return map_aig(aig, k=k)
+    mapped = map_aig(aig, k=k)
+    if verify:
+        from repro.check.pipeline import verify_synthesis
+        verify_synthesis(raw, aig, mapped)
+    return mapped
 
 
 def compile_logic_network(net, effort: int = 1, k: int = 6,
                           engine: str = "numpy",
-                          interpret=None) -> BitplaneNetwork:
+                          interpret=None,
+                          verify: bool = False) -> BitplaneNetwork:
     """LogicNetwork -> optimized mapped netlist, ready to execute.
 
     ``engine="pallas"`` runs the netlist through the fused
-    ``kernels.lut_eval`` device pipeline instead of the host fold."""
+    ``kernels.lut_eval`` device pipeline instead of the host fold.
+    ``verify=True`` additionally runs the ``repro.check`` lint +
+    equivalence passes over every synthesis stage (CheckFailure on the
+    first counterexample)."""
     return BitplaneNetwork.from_logic_network(net, effort=effort, k=k,
                                               engine=engine,
-                                              interpret=interpret)
+                                              interpret=interpret,
+                                              verify=verify)

@@ -158,9 +158,14 @@ class DevicePlan:
 
 
 def compile_device_plan(mapped: MappedNetwork,
-                        plan: Optional[_Plan] = None) -> DevicePlan:
+                        plan: Optional[_Plan] = None,
+                        verify: bool = False) -> DevicePlan:
     """Stack the per-level arrays of ``_compile_plan`` into uniform-width
-    tensors ready to ship to the device."""
+    tensors ready to ship to the device.
+
+    ``verify=True`` runs ``repro.check``'s plan validator plus a
+    mapped<->plan miter on the result and raises ``CheckFailure`` with
+    the first counterexample on any disagreement."""
     if plan is None:
         plan = _compile_plan(mapped)
     k = mapped.k
@@ -175,9 +180,13 @@ def compile_device_plan(mapped: MappedNetwork,
         leaf_idx[i, :n] = la.leaf_idx
         tt_bits[i, :n] = la.tt_bits
         out_wires[i, :n] = la.out_wires
-    return DevicePlan(leaf_idx, tt_bits, out_wires,
-                      plan.out_idx.copy(), plan.out_neg.copy(),
-                      mapped.n_pis, n_wires, k)
+    dplan = DevicePlan(leaf_idx, tt_bits, out_wires,
+                       plan.out_idx.copy(), plan.out_neg.copy(),
+                       mapped.n_pis, n_wires, k)
+    if verify:
+        from repro.check.pipeline import verify_plan
+        verify_plan(mapped, dplan)
+    return dplan
 
 
 def execute_packed_pallas(mapped: MappedNetwork, pi_words: np.ndarray,
@@ -365,11 +374,17 @@ class BitplaneNetwork:
     def from_logic_network(cls, net, effort: int = 1, k: int = 6,
                            engine: str = "numpy",
                            interpret: Optional[bool] = None,
-                           ) -> "BitplaneNetwork":
+                           verify: bool = False) -> "BitplaneNetwork":
         from . import synthesize        # lazy: package init imports us
         from .from_sop import network_to_aig
-        return cls(net, synthesize(network_to_aig(net), effort=effort, k=k),
-                   engine=engine, interpret=interpret)
+        bn = cls(net, synthesize(network_to_aig(net), effort=effort, k=k,
+                                 verify=verify),
+                 engine=engine, interpret=interpret)
+        if verify:
+            from repro.check.pipeline import preflight
+            from repro.check.report import require_ok
+            require_ok(preflight(bn))
+        return bn
 
     @property
     def device(self) -> _PallasExecutor:

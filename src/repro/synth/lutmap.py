@@ -23,6 +23,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.lutcost import LUT_K, MapReport
+
 from .aig import AIG, lit_var
 from .cuts import Cut, enumerate_cuts
 
@@ -62,6 +64,11 @@ class MappedNetwork:
         lvl = self.levels()
         return max((lvl[lit_var(o)] for o in self.outputs), default=0)
 
+    def report(self, ffs: int = 0) -> MapReport:
+        """Measured LUTs/depth as a ``core.lutcost.MapReport`` so the
+        structural numbers aggregate with the analytic cost model."""
+        return MapReport(self.n_luts, self.depth, ffs)
+
 
 def _extract_cover(aig: AIG, choice: List[Optional[Cut]],
                    ) -> List[MappedLUT]:
@@ -83,7 +90,7 @@ def _extract_cover(aig: AIG, choice: List[Optional[Cut]],
     return luts
 
 
-def map_aig(aig: AIG, k: int = 6, n_cuts: int = 8,
+def map_aig(aig: AIG, k: int = LUT_K, n_cuts: int = 8,
             area_passes: int = 2) -> MappedNetwork:
     cuts, arrival, _ = enumerate_cuts(aig, k=k, n_cuts=n_cuts)
     n = aig.n_nodes
