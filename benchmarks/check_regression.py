@@ -113,7 +113,10 @@ def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
 
     Works on both writers: ``benchmarks/run.py`` (rows + results) and
     ``benchmarks/loadgen.py`` (results only) — serve metrics always come
-    from ``results`` so the two formats share keys."""
+    from ``results`` so the two formats share keys. Only
+    ``rows``/``results`` are read: the top-level ``meta`` provenance
+    block (git sha, timestamp, device) is deliberately never diffed —
+    it changes every run by design."""
     out: Dict[str, Tuple[float, str]] = {}
     section = doc.get("section", "?")
     res = doc.get("results") or {}

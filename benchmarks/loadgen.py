@@ -124,14 +124,15 @@ def replay_busy_server(arrivals_us: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def run_open_loop(executor, xs: np.ndarray, qps: float, seed: int = 0,
-                  max_batch: int = 256, max_wait_us: float = 200.0):
+                  max_batch: int = 256, max_wait_us: float = 200.0,
+                  tracer=None, exec_estimate_us: Optional[float] = None):
     """Real-time Poisson open loop into a threaded scheduler."""
     from repro.serve import MicroBatchScheduler, RequestRejected, SchedConfig
 
     n = xs.shape[0]
     cfg = SchedConfig(max_batch=max_batch, max_wait_us=max_wait_us,
-                      max_queue=2 * n)
-    sched = MicroBatchScheduler(executor, cfg).start()
+                      max_queue=2 * n, exec_estimate_us=exec_estimate_us)
+    sched = MicroBatchScheduler(executor, cfg, tracer=tracer).start()
     arrivals = poisson_arrivals_us(n, qps, seed)
     futs: List = [None] * n
     t0 = time.perf_counter() * 1e6
@@ -150,7 +151,8 @@ def run_open_loop(executor, xs: np.ndarray, qps: float, seed: int = 0,
 def run_slo_lanes(executor, xs: np.ndarray, qps: float,
                   slo_us: Sequence[float], seed: int = 0,
                   max_batch: int = 256, max_wait_us: float = 200.0,
-                  tight_every: int = 4):
+                  tight_every: int = 4, tracer=None,
+                  exec_estimate_us: Optional[float] = None):
     """Two-lane SLO open loop: every ``tight_every``-th request rides
     lane 0 (tight SLO), the rest lane 1 (loose SLO). Deadlines default
     from the per-lane table; expired requests are shed with a typed
@@ -161,8 +163,9 @@ def run_slo_lanes(executor, xs: np.ndarray, qps: float,
     n = xs.shape[0]
     cfg = SchedConfig(max_batch=max_batch, max_wait_us=max_wait_us,
                       max_queue=2 * n, n_priorities=max(2, len(slo_us)),
-                      lane_slo_us=tuple(slo_us))
-    sched = MicroBatchScheduler(executor, cfg).start()
+                      lane_slo_us=tuple(slo_us),
+                      exec_estimate_us=exec_estimate_us)
+    sched = MicroBatchScheduler(executor, cfg, tracer=tracer).start()
     arrivals = poisson_arrivals_us(n, qps, seed)
     lanes = np.where(np.arange(n) % tight_every == 0, 0,
                      min(1, len(slo_us) - 1)).astype(np.int32)
@@ -187,14 +190,15 @@ def run_slo_lanes(executor, xs: np.ndarray, qps: float,
 
 
 def run_closed_loop(executor, xs: np.ndarray, concurrency: int = 32,
-                    max_batch: int = 256, max_wait_us: float = 200.0):
+                    max_batch: int = 256, max_wait_us: float = 200.0,
+                    tracer=None, exec_estimate_us: Optional[float] = None):
     """Fixed in-flight submit→wait workers (peak throughput probe)."""
     from repro.serve import MicroBatchScheduler, SchedConfig
 
     n = xs.shape[0]
     cfg = SchedConfig(max_batch=max_batch, max_wait_us=max_wait_us,
-                      max_queue=2 * n)
-    sched = MicroBatchScheduler(executor, cfg).start()
+                      max_queue=2 * n, exec_estimate_us=exec_estimate_us)
+    sched = MicroBatchScheduler(executor, cfg, tracer=tracer).start()
     results = np.full((n,), -1, np.int32)
     it = iter(range(n))
     lock = threading.Lock()
@@ -245,9 +249,18 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
         loadgen: str = "both", n_replicas: int = 1, steps: Optional[int] = None,
         seed: int = 0, write_json: bool = True,
         engine: str = "numpy",
-        slo_us: Optional[Sequence[float]] = None) -> Dict:
+        slo_us: Optional[Sequence[float]] = None,
+        trace: Optional[str] = None) -> Dict:
     """Train JSC-S once, then loadgen every backend through the
-    scheduler; returns (and optionally writes) the BENCH_serve record."""
+    scheduler; returns (and optionally writes) the BENCH_serve record.
+
+    ``trace=PATH`` records the full request lifecycle with
+    ``repro.obs`` and writes a Perfetto-loadable Chrome trace there
+    (metrics-registry snapshot embedded as ``otherData``), plus a
+    measured per-level ``lut_eval`` latency table next to it
+    (``<PATH stem>.lut_table.json``) whose whole-netlist estimate seeds
+    the scheduler's flush margin and replica dispatch for the
+    bitplane-pallas backend."""
     from repro.configs.jsc import JSC_S
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -271,6 +284,34 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
                               backend=be, engine=en)
                for b, (be, en) in resolved.items()}
     direct = {b: engines[b].classify(xs) for b in backends}
+
+    # observability: one tracer + registry across every loadgen phase,
+    # and a calibrated per-level lut_eval latency table for any backend
+    # running the device pipeline
+    tracer = None
+    registry = None
+    lut_table = None
+    exec_est_us: Dict[str, float] = {}
+    if trace:
+        from repro.obs import MetricsRegistry, SpanTracer, build_latency_table
+        from repro.synth.executor import compile_device_plan
+
+        tracer = SpanTracer(capacity=1 << 18)
+        registry = MetricsRegistry()
+        for b, (be, en) in resolved.items():
+            if be != "bitplane" or en != "pallas":
+                continue
+            bn = engines[b].bitnet
+            dplan = compile_device_plan(bn.mapped, bn._plan)
+            if lut_table is None:
+                lut_table = build_latency_table(dplan,
+                                                iters=2 if fast else 3)
+            exec_est_us[b] = lut_table.estimate_plan_us(dplan)
+            print(f"[loadgen] {b}: calibrated netlist estimate "
+                  f"{exec_est_us[b]:.1f}us/batch "
+                  f"({dplan.n_levels} levels)")
+        if lut_table is None:           # no device backend: grid only
+            lut_table = build_latency_table(iters=2 if fast else 3)
 
     # legacy sequential reference (gather = the seed's default backend)
     base_eng = engines.get("gather") or next(iter(engines.values()))
@@ -301,6 +342,7 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
                  "baseline_sequential": base, "backends": {}}
     for b in backends:
         be, en = resolved[b]
+        est = exec_est_us.get(b)
         executor = engines[b].scheduler_executor()
         if n_replicas > 1:              # independent data-parallel engines
             # least_slack so the slo_lanes section measures the same
@@ -309,11 +351,16 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
             # least-loaded, so open/closed numbers stay comparable
             executor = build_logic_replicas(
                 net, JSC_S.n_classes, n_replicas=n_replicas, backend=be,
-                max_batch=max_batch, policy="least_slack", engine=en)
+                max_batch=max_batch, policy="least_slack", engine=en,
+                exec_seed_us=est)
         rec: Dict = {"engine": en} if be == "bitplane" else {}
         if loadgen in ("open", "both"):
             got, snap = run_open_loop(executor, xs, offered, seed=seed,
-                                      max_batch=max_batch)
+                                      max_batch=max_batch, tracer=tracer,
+                                      exec_estimate_us=est)
+            if registry is not None:
+                registry.register(f"{b}.open_loop",
+                                  lambda snap=snap: snap)
             rec["open_loop"] = _snap_row(snap)
             rec["open_loop"]["identical_to_classify"] = bool(
                 np.array_equal(got, direct[b]))
@@ -321,7 +368,12 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
                 snap["qps"] / base["qps"], 2) if base["qps"] else 0.0
             # per-lane SLO attainment under moderate two-lane load
             got, lanes, snap = run_slo_lanes(executor, xs, slo_qps, slo_us,
-                                             seed=seed, max_batch=max_batch)
+                                             seed=seed, max_batch=max_batch,
+                                             tracer=tracer,
+                                             exec_estimate_us=est)
+            if registry is not None:
+                registry.register(f"{b}.slo_lanes",
+                                  lambda snap=snap: snap)
             served = got >= 0
             rec["slo_lanes"] = {
                 "offered_qps": round(slo_qps, 1),
@@ -336,18 +388,46 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
                           for lane, ls in snap["lanes"].items()},
             }
         if loadgen in ("closed", "both"):
-            got, snap = run_closed_loop(executor, xs, max_batch=max_batch)
+            got, snap = run_closed_loop(executor, xs, max_batch=max_batch,
+                                        tracer=tracer,
+                                        exec_estimate_us=est)
+            if registry is not None:
+                registry.register(f"{b}.closed_loop",
+                                  lambda snap=snap: snap)
             rec["closed_loop"] = _snap_row(snap)
             rec["closed_loop"]["identical_to_classify"] = bool(
                 np.array_equal(got, direct[b]))
+        if registry is not None:
+            if hasattr(executor, "publish"):    # ReplicaSet dispatch stats
+                executor.publish(registry, f"{b}.replicas")
+            fn = getattr(engines[b], "_fn", None)
+            if hasattr(fn, "publish"):          # aggregator occupancy
+                fn.publish(registry, f"{b}.aggregate")
         out["backends"][b] = rec
     out["argmax_identical_across_backends"] = bool(all(
         np.array_equal(direct[b], direct[backends[0]]) for b in backends))
 
+    if trace:
+        from repro.obs import write_chrome_trace
+        table_path = os.path.splitext(trace)[0] + ".lut_table.json"
+        lut_table.save(table_path)
+        write_chrome_trace(trace, tracer, other_data=registry.snapshot())
+        out["trace"] = {
+            "path": trace, "events": tracer.n_recorded,
+            "dropped": tracer.n_dropped, "lut_table": table_path,
+            "exec_estimate_us": {k: round(v, 2)
+                                 for k, v in exec_est_us.items()},
+        }
+        print(f"[loadgen] trace: {tracer.n_recorded} events "
+              f"({tracer.n_dropped} dropped) -> {trace}")
+        print(f"[loadgen] lut latency table -> {table_path}")
+
     if write_json:
+        from benchmarks.meta import bench_meta
         path = os.path.join(REPO_ROOT, "BENCH_serve.json")
         with open(path, "w") as f:
-            json.dump({"section": "serve", "results": out}, f, indent=1)
+            json.dump({"section": "serve", "meta": bench_meta(seed=seed),
+                       "results": out}, f, indent=1)
         print(f"[loadgen] wrote {path}")
     return out
 
@@ -371,13 +451,19 @@ def main(argv=None):
                     help="comma list of per-lane SLO deadline budgets in µs "
                          "(tight lane first, e.g. '5000,50000'; default: "
                          "scaled from the measured service time)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the request lifecycle with repro.obs: "
+                         "writes a Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev) with the metrics-registry "
+                         "snapshot as otherData, plus a measured per-level "
+                         "lut_eval latency table (<stem>.lut_table.json)")
     args = ap.parse_args(argv)
     slo_us = (tuple(float(v) for v in args.slo_us.split(","))
               if args.slo_us else None)
     out = run(fast=args.fast, backends=tuple(args.backends.split(",")),
               n_requests=args.requests, qps=args.qps, loadgen=args.loadgen,
               n_replicas=args.replicas, steps=args.steps, seed=args.seed,
-              engine=args.engine, slo_us=slo_us)
+              engine=args.engine, slo_us=slo_us, trace=args.trace)
     base = out["baseline_sequential"]
     print(f"[loadgen] sequential baseline: {base['qps']:.0f} qps "
           f"p95={base['p95_us']:.0f}us")

@@ -1,0 +1,52 @@
+"""Run metadata stamped into every BENCH_*.json.
+
+A benchmark number without its provenance (commit, device, jax
+version, when it ran) cannot be compared across PRs with any
+confidence. ``bench_meta()`` collects that context; writers attach it
+as a top-level ``meta`` block, which ``check_regression.py`` tolerates
+(it diffs only ``rows``/``results``).
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import platform
+import subprocess
+from typing import Dict, Optional
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, timeout=10,
+            capture_output=True, text=True)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def bench_meta(seed: Optional[int] = None) -> Dict:
+    """Provenance block for a benchmark JSON: git sha, UTC timestamp,
+    jax + device info, python version, and the run seed (if any).
+    Every field degrades to None rather than raising — metadata must
+    never be the reason a benchmark run fails."""
+    meta: Dict = {
+        "git_sha": _git_sha(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    if seed is not None:
+        meta["seed"] = int(seed)
+    try:
+        import jax
+        meta["jax_version"] = jax.__version__
+        meta["jax_backend"] = jax.default_backend()
+        meta["device"] = str(jax.devices()[0])
+        meta["n_devices"] = jax.device_count()
+    except Exception:                   # jax missing or no backend
+        meta["jax_version"] = None
+    return meta

@@ -35,11 +35,16 @@ def _emit(name: str, us: float, derived: str):
 
 def _write_bench_json(all_results: dict) -> None:
     """One BENCH_<section>.json per section at the repo root: the CSV rows
-    plus that section's full result object (derived metrics)."""
+    plus that section's full result object (derived metrics), stamped
+    with a run-provenance ``meta`` block (ignored by the regression
+    differ, which reads only ``rows``/``results``)."""
+    from benchmarks.meta import bench_meta
+
+    meta = bench_meta()
     for section, rows in _ROWS.items():
         path = os.path.join(REPO_ROOT, f"BENCH_{section}.json")
         with open(path, "w") as f:
-            json.dump({"section": section, "rows": rows,
+            json.dump({"section": section, "meta": meta, "rows": rows,
                        "results": all_results.get(section)},
                       f, indent=1, default=str)
 

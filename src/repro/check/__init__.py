@@ -1,7 +1,7 @@
 """repro.check — static analysis and verification for the synth->serve
 stack.
 
-Four passes, all runnable via ``python -m repro.check``:
+Five passes, all runnable via ``python -m repro.check``:
 
   1. **netlist lint** (``netlist_lint``) — structural invariants of the
      AIG and the mapped k-LUT netlist;
@@ -11,7 +11,11 @@ Four passes, all runnable via ``python -m repro.check``:
   3. **device-plan validation** (``plan_check``) — shape/dtype/index/
      VMEM contracts of ``DevicePlan`` tensors, cached by plan hash;
   4. **concurrency lint** (``concurrency``) — AST lock-discipline and
-     reject-reason coverage over ``repro.serve``.
+     reject-reason coverage over ``repro.serve``;
+  5. **trace schema** (``tracecheck``) — invariants of exported
+     ``repro.obs`` traces: span-time monotonicity/nesting, async
+     begin/end pairing with no orphans, flush-reason and terminal-
+     outcome vocabularies.
 
 ``pipeline.check_synth_pipeline`` chains 1–3 over a real synthesis run;
 ``pipeline.preflight`` is the serving-startup subset behind
@@ -29,15 +33,19 @@ from .plan_check import (DEFAULT_VMEM_BUDGET, estimate_vmem_bytes,
 from .report import (Counterexample, CheckFailure, CheckReport, Issue,
                      require_ok)
 from .srclint import check_duplicate_definitions
+from .tracecheck import (check_trace, check_trace_file,
+                         synthetic_trace_events)
 
 __all__ = [
     "CheckFailure", "CheckReport", "Counterexample", "Issue",
     "DEFAULT_VMEM_BUDGET",
     "check_concurrency", "check_duplicate_definitions", "check_sop_stage",
-    "check_static", "check_synth_pipeline",
+    "check_static", "check_synth_pipeline", "check_trace",
+    "check_trace_file",
     "equiv_aig_mapped", "equiv_aigs", "equiv_cover_aig",
     "equiv_mapped_plan", "equiv_network_mapped", "execute_plan_host",
     "estimate_vmem_bytes", "lint_aig", "lint_mapped", "miter",
     "plan_fingerprint", "preflight", "require_ok",
+    "synthetic_trace_events",
     "validate_device_plan", "verify_plan", "verify_synthesis",
 ]

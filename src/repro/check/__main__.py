@@ -3,7 +3,9 @@
 By default trains a tiny JSC-S model, compiles it to logic, and runs
 every pass (netlist lint, stage equivalence, device-plan validation)
 over the real pipeline, plus the source-level passes (concurrency
-lint, duplicate-definition watchlist). ``--fast`` shrinks the training
+lint, duplicate-definition watchlist) and the trace-schema pass
+(``--trace-file`` validates an exported repro.obs trace; without it a
+synthetic FakeClock scheduler run is traced and validated). ``--fast`` shrinks the training
 run and vector counts so the whole thing fits a CI minute; ``--static``
 skips the model entirely.
 
@@ -19,7 +21,8 @@ from .pipeline import check_synth_pipeline
 from .plan_check import DEFAULT_VMEM_BUDGET
 from .report import CheckReport
 
-PASS_CHOICES = ("lint", "equiv", "plan", "concurrency", "srclint")
+PASS_CHOICES = ("lint", "equiv", "plan", "concurrency", "srclint",
+                "trace")
 
 
 def _build_jsc(fast: bool, seed: int):
@@ -54,6 +57,10 @@ def main(argv=None) -> int:
     ap.add_argument("--vmem-budget-mb", type=float, default=None,
                     help="device-plan VMEM budget (default "
                     f"{DEFAULT_VMEM_BUDGET / 2**20:.0f} MiB)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="exported trace (Chrome JSON or JSONL) for the "
+                    "trace pass; without it a synthetic FakeClock "
+                    "scheduler run is validated instead")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="show warnings, not just errors")
     args = ap.parse_args(argv)
@@ -68,6 +75,17 @@ def main(argv=None) -> int:
               else int(args.vmem_budget_mb * 2**20))
     t0 = time.time()
     reports = []
+
+    if "trace" in wanted:
+        from .tracecheck import (check_trace, check_trace_file,
+                                 synthetic_trace_events)
+        if args.trace_file:
+            reports.append(check_trace_file(args.trace_file))
+        else:
+            print("[check] no --trace-file: validating a synthetic "
+                  "FakeClock scheduler trace ...", flush=True)
+            events, n_dropped = synthetic_trace_events()
+            reports.append(check_trace(events, n_dropped=n_dropped))
 
     if wanted & {"concurrency", "srclint"}:
         static = CheckReport("static")

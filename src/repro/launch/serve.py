@@ -18,7 +18,6 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import time
 
 import jax
 import numpy as np
@@ -34,7 +33,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                 use_pallas: bool, backend: str = "gather",
                 engine: str = "numpy", sched: bool = False,
                 replicas: int = 1, qps: float = None, loadgen: str = None,
-                slo_us: tuple = None, check: bool = False):
+                slo_us: tuple = None, check: bool = False,
+                trace: str = None):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -76,7 +76,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         from benchmarks import loadgen as lg
         out = lg.run(fast=True, backends=(backend,), n_requests=n_requests,
                      qps=qps, loadgen=loadgen, n_replicas=replicas,
-                     steps=train_steps, engine=engine, slo_us=slo_us)
+                     steps=train_steps, engine=engine, slo_us=slo_us,
+                     trace=trace)
         rec = out["backends"][backend]
         mode = "open_loop" if "open_loop" in rec else "closed_loop"
         print(f"[serve] {mode}: {rec[mode]['qps']:.0f} qps "
@@ -90,6 +91,11 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                       f"miss_rate={lr['deadline_miss_rate']:.3f} "
                       f"shed={lr['shed']} p99={lr['p99_us']:.0f}us")
         return rec
+
+    tracer = None
+    if trace:
+        from repro.obs import SpanTracer
+        tracer = SpanTracer()
 
     if sched:                           # scheduler + replica dispatch
         from repro.serve import (MicroBatchScheduler, RequestRejected,
@@ -105,7 +111,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
             executor, SchedConfig(max_batch=eng.max_batch,
                                   max_queue=4 * n_requests * 64,
                                   n_priorities=max(2, len(slo_us or ())),
-                                  lane_slo_us=slo_us)).start()
+                                  lane_slo_us=slo_us),
+            tracer=tracer).start()
         futs = [s.submit(xte[i % xte.shape[0]])
                 for i in range(n_requests * 64)]
         s.stop(drain=True)
@@ -120,6 +127,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
             got[served] == yte[np.arange(len(got)) % yte.shape[0]][served]
         )) if served.any() else 0.0
         snap = s.metrics.snapshot()
+        if tracer is not None:
+            _export_trace(trace, tracer, s, executor)
         print(f"[serve] sched x{replicas}: {len(futs)} requests "
               f"acc={acc:.4f} p50={snap['p50_us']:.1f}us "
               f"p95={snap['p95_us']:.1f}us qps={snap['qps']:.0f} "
@@ -129,7 +138,11 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         return snap
 
     reqs = [xte[i * 64: (i + 1) * 64] for i in range(n_requests)]
-    results, stats = eng.serve_queue(reqs)
+    results, stats = eng.serve_queue(reqs, tracer=tracer)
+    if tracer is not None:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(trace, tracer)
+        print(f"[serve] trace: {tracer.n_recorded} events -> {trace}")
     acc = float(np.mean(np.concatenate(results)
                         == yte[: sum(len(r) for r in reqs)]))
     print(f"[serve] {n_requests} requests: acc={acc:.4f} "
@@ -137,20 +150,36 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
     return stats
 
 
+def _export_trace(path: str, tracer, sched, executor) -> None:
+    """Write the Chrome trace with a full metrics-registry snapshot as
+    ``otherData`` (scheduler metrics + replica/aggregator stats)."""
+    from repro.obs import MetricsRegistry, write_chrome_trace
+
+    reg = MetricsRegistry()
+    sched.metrics.publish(reg, "serve")
+    if hasattr(executor, "publish"):
+        executor.publish(reg)
+    write_chrome_trace(path, tracer, other_data=reg.snapshot())
+    print(f"[serve] trace: {tracer.n_recorded} events "
+          f"({tracer.n_dropped} dropped) -> {path}")
+
+
 def serve_lm(arch: str, smoke: bool, n_requests: int, max_new: int):
     from repro.models import lm
+    from repro.serve.clock import SystemClock
     from repro.serving.engine import LMEngine, LMRequest
 
+    clock = SystemClock()
     cfg = get_arch(arch, smoke=smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = LMEngine(cfg, params, n_slots=4, max_seq=256)
+    eng = LMEngine(cfg, params, n_slots=4, max_seq=256, clock=clock)
     rng = np.random.default_rng(0)
     reqs = [LMRequest(prompt=rng.integers(0, cfg.vocab_size, 32,
                                           dtype=np.int32),
                       max_new_tokens=max_new) for _ in range(n_requests)]
-    t0 = time.perf_counter()
+    t0_us = clock.now_us()
     done = eng.run(reqs)
-    dt = time.perf_counter() - t0
+    dt = (clock.now_us() - t0_us) * 1e-6
     tok = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok/dt:.1f} tok/s)")
@@ -191,6 +220,11 @@ def main(argv=None):
                          "µs (lane 0 first, e.g. '100,1000'); requests "
                          "past their lane budget are shed with a typed "
                          "DEADLINE_EXCEEDED reject")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the request lifecycle with repro.obs and "
+                         "write a Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev) with the metrics-registry "
+                         "snapshot embedded as otherData")
     ap.add_argument("--check", action="store_true",
                     help="repro.check preflight before serving (bitplane "
                          "backend): netlist lint, DevicePlan validation, "
@@ -203,7 +237,8 @@ def main(argv=None):
         serve_logic(args.jsc, args.train_steps, args.requests, args.pallas,
                     backend=args.backend, engine=args.engine,
                     sched=args.sched, replicas=args.replicas, qps=args.qps,
-                    loadgen=args.loadgen, slo_us=slo_us, check=args.check)
+                    loadgen=args.loadgen, slo_us=slo_us, check=args.check,
+                    trace=args.trace)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)
 

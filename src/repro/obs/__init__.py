@@ -1,0 +1,43 @@
+"""repro.obs — the measurement substrate for the serving stack.
+
+NullaNet Tiny's whole pitch is latency, so latency has to be visible
+*with structure*, not just as end-to-end histograms:
+
+  trace      — thread-safe ring-buffer span tracer (injectable clock,
+               near-zero overhead when disabled); every request carries
+               submit → queue-wait → batch-formation (with flush
+               reason) → pack → dispatch → device-exec → scatter spans;
+  export     — Chrome trace-event JSON (opens in Perfetto / chrome://
+               tracing) and structured JSONL event export;
+  registry   — one counters/gauges/histograms registry that
+               ``ServeMetrics``, ``ReplicaSet`` and
+               ``BitplaneAggregator`` publish into, with a single
+               ``snapshot()`` surface;
+  kernelprof — per-level ``lut_eval`` device timing fitted into a
+               measured ``(level_width, k, fanin) -> µs`` table, written
+               as an artifact so ``least_slack`` dispatch and mapping
+               search consume calibrated estimates instead of
+               cold-start EWMA.
+
+``benchmarks/loadgen.py --trace PATH`` and
+``repro.launch.serve --trace PATH`` wire the tracer through the whole
+request path; ``python -m repro.check --passes trace`` validates trace
+well-formedness (monotonic spans, no orphans, valid flush reasons).
+"""
+from .trace import (FLUSH_REASONS, NULL_TRACER, NullTracer, SpanTracer,
+                    TraceEvent)
+from .export import (load_trace_events, to_chrome_trace, to_jsonl,
+                     write_chrome_trace, write_jsonl)
+from .registry import Counter, Gauge, MetricsRegistry
+from .kernelprof import (LatencyTable, measure_level_grid, profile_plan,
+                         build_latency_table)
+
+__all__ = [
+    "FLUSH_REASONS", "NULL_TRACER", "NullTracer", "SpanTracer",
+    "TraceEvent",
+    "load_trace_events", "to_chrome_trace", "to_jsonl",
+    "write_chrome_trace", "write_jsonl",
+    "Counter", "Gauge", "MetricsRegistry",
+    "LatencyTable", "measure_level_grid", "profile_plan",
+    "build_latency_table",
+]

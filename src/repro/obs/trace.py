@@ -1,0 +1,252 @@
+"""Thread-safe span tracer for the request lifecycle.
+
+Two event families, mirroring the Chrome trace-event model so export is
+a straight mapping:
+
+  * **thread spans** (``ph="X"``) — work done start-to-finish on one
+    thread: batch formation, aggregate pack, device exec, scatter.
+    Nested calls on the same thread nest in Perfetto by time
+    containment, so the aggregator's ``pack``/``device_exec`` spans
+    render inside the scheduler's ``exec`` span with no extra plumbing.
+  * **async spans** (``ph="b"/"n"/"e"``) — one per *request*, keyed by
+    a tracer-allocated id threaded through ``ServeRequest``/
+    ``ServeFuture``: begin at submit, instants for queue/batch
+    milestones (the batch-formation instant carries the flush reason),
+    end at complete/shed/error. Async spans cross threads — submit
+    happens on the client thread, completion on the scheduler thread —
+    which is exactly what thread spans cannot express.
+
+Storage is a preallocated ring buffer: recording is one tuple build and
+one slot write under a lock, old events are overwritten (``n_dropped``
+counts them), and nothing allocates proportional to trace length until
+``events()`` is called. The clock is injectable (``FakeClock`` in
+tests); when the tracer is disabled — or the shared ``NULL_TRACER`` is
+in use — every record call is a single attribute check, so the serving
+hot path pays ~nothing for the instrumentation points it carries.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+# batch flush reasons annotated on batch-formation events; the trace
+# validation pass (repro.check --passes trace) rejects anything else
+FLUSH_REASONS = ("size", "deadline", "max_wait", "drain", "shed")
+
+
+class TraceEvent(NamedTuple):
+    """One trace record (all times µs, from the tracer's clock).
+
+    ``ph`` is the Chrome trace-event phase: ``X`` complete thread span
+    (``dur_us`` set), ``b``/``n``/``e`` async begin/instant/end (keyed
+    by ``scope_id``), ``i`` global instant.
+    """
+
+    ph: str
+    name: str
+    cat: str
+    ts_us: float
+    dur_us: float
+    tid: int
+    scope_id: Optional[int]
+    args: Optional[Dict[str, object]]
+
+
+class _Span:
+    """Context manager recording one thread span on exit."""
+
+    __slots__ = ("_tracer", "_name", "_cat", "_args", "_t0")
+
+    def __init__(self, tracer: "SpanTracer", name: str, cat: str,
+                 args: Optional[dict]):
+        self._tracer = tracer
+        self._name = name
+        self._cat = cat
+        self._args = args
+
+    def __enter__(self) -> "_Span":
+        self._t0 = self._tracer.now_us()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._tracer.complete(self._name, self._t0, self._tracer.now_us(),
+                              cat=self._cat, args=self._args)
+
+
+class _NullSpan:
+    """Shared no-op context manager for the disabled paths."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class SpanTracer:
+    """Ring-buffer span recorder with an injectable clock.
+
+    ``capacity`` bounds memory: the buffer holds the most recent
+    ``capacity`` events and ``n_dropped`` counts overwrites. All
+    recording methods are thread-safe; ids from ``new_id`` are unique
+    per tracer and are what requests carry across threads.
+    """
+
+    def __init__(self, clock=None, capacity: int = 1 << 16,
+                 enabled: bool = True):
+        if clock is None:
+            from repro.serve.clock import SystemClock
+            clock = SystemClock()
+        assert capacity >= 1
+        self.clock = clock
+        self.enabled = enabled
+        self._cap = capacity
+        self._buf: List[Optional[TraceEvent]] = [None] * capacity
+        self._head = 0              # next write slot
+        self._count = 0             # total events ever recorded
+        self._next_id = 0
+        self._lock = threading.Lock()
+
+    # -- ids / time --------------------------------------------------------
+    def now_us(self) -> float:
+        return self.clock.now_us()
+
+    def new_id(self) -> int:
+        with self._lock:
+            self._next_id += 1
+            return self._next_id
+
+    @property
+    def n_recorded(self) -> int:
+        return self._count
+
+    @property
+    def n_dropped(self) -> int:
+        return max(0, self._count - self._cap)
+
+    # -- recording ---------------------------------------------------------
+    def _record(self, ev: TraceEvent) -> None:
+        with self._lock:
+            self._buf[self._head] = ev
+            self._head = (self._head + 1) % self._cap
+            self._count += 1
+
+    def complete(self, name: str, t0_us: float, t1_us: float,
+                 cat: str = "sched", args: Optional[dict] = None) -> None:
+        """A finished thread span with explicit endpoints (for spans
+        whose start was stamped on another code path)."""
+        if not self.enabled:
+            return
+        self._record(TraceEvent("X", name, cat, t0_us, t1_us - t0_us,
+                                threading.get_ident(), None, args))
+
+    def span(self, name: str, cat: str = "sched",
+             args: Optional[dict] = None):
+        """``with tracer.span("exec"): ...`` — times the block on the
+        current thread."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, args)
+
+    def instant(self, name: str, cat: str = "sched",
+                args: Optional[dict] = None) -> None:
+        if not self.enabled:
+            return
+        self._record(TraceEvent("i", name, cat, self.now_us(), 0.0,
+                                threading.get_ident(), None, args))
+
+    def abegin(self, name: str, scope_id: int, cat: str = "request",
+               args: Optional[dict] = None,
+               ts_us: Optional[float] = None) -> None:
+        """Begin the async span ``scope_id`` (one per request)."""
+        if not self.enabled:
+            return
+        self._record(TraceEvent(
+            "b", name, cat, self.now_us() if ts_us is None else ts_us,
+            0.0, threading.get_ident(), scope_id, args))
+
+    def ainstant(self, name: str, scope_id: int, cat: str = "request",
+                 args: Optional[dict] = None) -> None:
+        if not self.enabled:
+            return
+        self._record(TraceEvent("n", name, cat, self.now_us(), 0.0,
+                                threading.get_ident(), scope_id, args))
+
+    def aend(self, name: str, scope_id: int, cat: str = "request",
+             args: Optional[dict] = None) -> None:
+        if not self.enabled:
+            return
+        self._record(TraceEvent("e", name, cat, self.now_us(), 0.0,
+                                threading.get_ident(), scope_id, args))
+
+    # -- reading -----------------------------------------------------------
+    def events(self) -> List[TraceEvent]:
+        """Snapshot of the retained events in recording order."""
+        with self._lock:
+            if self._count <= self._cap:
+                raw = self._buf[: self._head]
+            else:
+                raw = self._buf[self._head:] + self._buf[: self._head]
+        return [e for e in raw if e is not None]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf = [None] * self._cap
+            self._head = 0
+            self._count = 0
+
+
+class NullTracer:
+    """Disabled tracer: same surface as ``SpanTracer``, every call a
+    no-op. The scheduler default, so untraced serving carries only an
+    ``if tracer.enabled`` per instrumentation point."""
+
+    enabled = False
+    clock = None
+
+    def now_us(self) -> float:
+        return 0.0
+
+    def new_id(self) -> int:
+        return 0
+
+    @property
+    def n_recorded(self) -> int:
+        return 0
+
+    @property
+    def n_dropped(self) -> int:
+        return 0
+
+    def complete(self, name, t0_us, t1_us, cat="sched", args=None) -> None:
+        pass
+
+    def span(self, name, cat="sched", args=None):
+        return _NULL_SPAN
+
+    def instant(self, name, cat="sched", args=None) -> None:
+        pass
+
+    def abegin(self, name, scope_id, cat="request", args=None,
+               ts_us=None) -> None:
+        pass
+
+    def ainstant(self, name, scope_id, cat="request", args=None) -> None:
+        pass
+
+    def aend(self, name, scope_id, cat="request", args=None) -> None:
+        pass
+
+    def events(self) -> List[TraceEvent]:
+        return []
+
+    def clear(self) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()

@@ -23,6 +23,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.synth.executor import BitplaneNetwork
 from repro.synth.simulate import WORD_BITS, pack_bits
 
@@ -46,6 +47,7 @@ class BitplaneAggregator:
         self.n_classes = n_classes
         self.lanes_per_word = WORD_BITS
         self.pad_rows = pad_rows
+        self.tracer = NULL_TRACER
         self.n_features = bitnet.net.n_inputs   # admission width check
         self.n_evals = 0            # lane-words carrying >= 1 real request
         self.n_rows = 0             # request rows served
@@ -86,12 +88,17 @@ class BitplaneAggregator:
         how often the pack went out with idle lanes as a result."""
         x = np.asarray(x)
         true_rows = x.shape[0]
-        pi_words = self.pack_requests(x)
+        with self.tracer.span("aggregate_pack", cat="pack", args={
+                "rows": true_rows,
+                "lane_words": -(-true_rows // self.lanes_per_word)}):
+            pi_words = self.pack_requests(x)
         # engine dispatch happens inside classify_packed: the pallas
         # engine ships the words to the device and returns only the
         # scattered per-request argmax; numpy is the host fold + decode.
-        labels = self.bitnet.classify_packed(pi_words, true_rows,
-                                             self.n_classes)
+        with self.tracer.span("device_exec", cat="exec", args={
+                "rows": true_rows, "engine": self.bitnet.engine}):
+            labels = self.bitnet.classify_packed(pi_words, true_rows,
+                                                 self.n_classes)
         # occupancy is accounted against *real* request rows: lane-words
         # that exist only because of pad_rows shape-stability padding
         # are tracked separately, not counted as served capacity.
@@ -102,6 +109,26 @@ class BitplaneAggregator:
         if true_rows % self.lanes_per_word:
             self.n_partial_packs += 1
         return labels
+
+    def set_tracer(self, tracer) -> None:
+        """Adopt ``tracer`` (propagated to the underlying network so
+        device spans nest inside ``device_exec``); the scheduler calls
+        this automatically when constructed with one."""
+        self.tracer = tracer
+        self.bitnet.tracer = tracer
+
+    def stats(self) -> dict:
+        occ = self.mean_lane_occupancy
+        return {"n_evals": self.n_evals, "n_rows": self.n_rows,
+                "n_pad_rows": self.n_pad_rows,
+                "n_partial_packs": self.n_partial_packs,
+                "engine": self.bitnet.engine,
+                "mean_lane_occupancy": occ}
+
+    def publish(self, registry, name: str = "aggregate") -> None:
+        """Expose the occupancy counters through a
+        ``repro.obs.MetricsRegistry`` snapshot provider."""
+        registry.register(name, self.stats)
 
     @property
     def mean_lane_occupancy(self) -> Optional[float]:

@@ -38,7 +38,9 @@ class LatencyHistogram:
     def __init__(self, max_samples: int = 200_000):
         self.counts = np.zeros(_N_BUCKETS, np.int64)
         self.samples: List[float] = []
-        self.max_samples = max_samples
+        # <= 0 means counts-only (no reservoir, percentiles report 0.0)
+        # rather than a ZeroDivisionError on the first overflow write
+        self.max_samples = max(int(max_samples), 0)
         self.n = 0
         self.total_us = 0.0
 
@@ -46,6 +48,8 @@ class LatencyHistogram:
         self.counts[_bucket_of(us)] += 1
         self.n += 1
         self.total_us += us
+        if self.max_samples <= 0:
+            return
         if len(self.samples) < self.max_samples:
             self.samples.append(us)
         else:  # reservoir: deterministic stride keep (no RNG in hot path)
@@ -53,8 +57,11 @@ class LatencyHistogram:
             self.samples[i] = us
 
     def percentile(self, p: float) -> float:
+        """Exact sample percentile; ``p`` is clamped to [0, 100] (p0 =
+        min, p100 = max) and an empty reservoir reports 0.0."""
         if not self.samples:
             return 0.0
+        p = min(max(float(p), 0.0), 100.0)
         return float(np.percentile(np.asarray(self.samples), p))
 
     def mean(self) -> float:
@@ -193,6 +200,12 @@ class ServeMetrics:
             self.errors += n_requests
 
     # -- reporting ---------------------------------------------------------
+    def publish(self, registry, name: str = "serve") -> None:
+        """Expose this accumulator through a
+        ``repro.obs.MetricsRegistry``: ``registry.snapshot()[name]`` is
+        this object's ``snapshot()``, evaluated lazily."""
+        registry.register(name, self.snapshot)
+
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             span_us = 0.0

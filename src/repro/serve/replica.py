@@ -27,6 +27,8 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .clock import SystemClock
 from .sched import RejectReason, RequestRejected
 
@@ -44,6 +46,7 @@ class Replica:
     served: int = 0
     failures: int = 0
     ewma_us: float = 0.0            # smoothed per-batch execution time
+    ewma_seeded: bool = False       # calibrated seed in ewma_us (keep it)
 
 
 class ReplicaSet:
@@ -55,13 +58,22 @@ class ReplicaSet:
     _GUARDED_BY = {"_rr": "_lock"}
 
     def __init__(self, fns: Sequence[Callable], policy: str = "rr",
-                 clock=None, n_features: Optional[int] = None):
+                 clock=None, n_features: Optional[int] = None,
+                 exec_seed_us: Optional[float] = None):
         if policy not in ("rr", "least_loaded", "least_slack"):
             raise ValueError(f"unknown dispatch policy {policy!r}")
         assert len(fns) >= 1
         self.replicas = [Replica(fn=f, rid=i) for i, f in enumerate(fns)]
+        if exec_seed_us is not None:
+            # calibrated per-batch execution estimate (kernelprof
+            # LatencyTable) — least_slack starts informed instead of
+            # treating every replica as free until its first batch
+            for r in self.replicas:
+                r.ewma_us = float(exec_seed_us)
+                r.ewma_seeded = True
         self.policy = policy
         self.clock = clock or SystemClock()
+        self.tracer = NULL_TRACER
         if n_features is None:      # propagate the width admission check
             n_features = next(
                 (getattr(f, "n_features") for f in fns
@@ -119,12 +131,18 @@ class ReplicaSet:
                 break
             t0 = self.clock.now_us()
             try:
-                out = r.fn(x)
+                with self.tracer.span("replica_dispatch", cat="dispatch",
+                                      args={"rid": r.rid,
+                                            "attempt": attempt,
+                                            "policy": self.policy}):
+                    out = r.fn(x)
                 dt = self.clock.now_us() - t0
                 with self._lock:
                     r.inflight -= 1
                     r.served += 1
-                    r.ewma_us = (dt if r.served == 1
+                    # first real measurement replaces a cold 0.0 but
+                    # only blends into a calibrated kernelprof seed
+                    r.ewma_us = (dt if r.served == 1 and not r.ewma_seeded
                                  else 0.8 * r.ewma_us + 0.2 * dt)
                 return out
             except Exception as e:
@@ -133,16 +151,34 @@ class ReplicaSet:
                     r.inflight -= 1
                     r.failures += 1
                     r.healthy = False
+                self.tracer.instant("replica_failover", cat="dispatch",
+                                    args={"rid": r.rid,
+                                          "error": type(e).__name__})
         raise AllReplicasDown(
             f"no healthy replica left (of {len(self.replicas)})"
         ) from last_exc
+
+    def set_tracer(self, tracer) -> None:
+        """Adopt ``tracer``; replica callables that themselves support
+        ``set_tracer`` (e.g. aggregators) are wired through too, so
+        device spans nest inside ``replica_dispatch``."""
+        self.tracer = tracer
+        for r in self.replicas:
+            if hasattr(r.fn, "set_tracer"):
+                r.fn.set_tracer(tracer)
 
     def stats(self) -> List[dict]:
         with self._lock:
             return [{"rid": r.rid, "healthy": r.healthy, "served": r.served,
                      "failures": r.failures, "inflight": r.inflight,
-                     "ewma_us": r.ewma_us}
+                     "ewma_us": r.ewma_us, "ewma_seeded": r.ewma_seeded}
                     for r in self.replicas]
+
+    def publish(self, registry, name: str = "replicas") -> None:
+        """Expose per-replica dispatch stats through a
+        ``repro.obs.MetricsRegistry`` snapshot provider."""
+        registry.register(
+            name, lambda: {"policy": self.policy, "replicas": self.stats()})
 
 
 # ---------------------------------------------------------------------------
@@ -167,20 +203,24 @@ def mesh_placed(fn: Callable, mesh) -> Callable:
         return np.asarray(fn(jax.device_put(arr, sh)))
 
     placed.n_features = getattr(fn, "n_features", None)
+    if hasattr(fn, "set_tracer"):       # keep tracer wiring reachable
+        placed.set_tracer = fn.set_tracer
     return placed
 
 
 def build_logic_replicas(net, n_classes: int, n_replicas: int = 1,
                          backend: str = "gather", max_batch: int = 256,
                          policy: str = "rr", mesh=None,
-                         engine: str = "numpy") -> ReplicaSet:
+                         engine: str = "numpy",
+                         exec_seed_us: Optional[float] = None) -> ReplicaSet:
     """Data-parallel ``LogicEngine`` replicas behind one dispatch point.
 
     Each replica owns its own engine (own jit cache / synthesized
     netlist); with a mesh active, batches route through the
     ``repro.dist`` sharding rules on their way in. ``engine`` selects
     the bitplane backend's netlist executor (numpy fold or the
-    ``kernels.lut_eval`` device pipeline).
+    ``kernels.lut_eval`` device pipeline). ``exec_seed_us`` seeds every
+    replica's execution-time EWMA with a calibrated kernelprof estimate.
     """
     from repro.serving.engine import LogicEngine
 
@@ -189,4 +229,5 @@ def build_logic_replicas(net, n_classes: int, n_replicas: int = 1,
         eng = LogicEngine(net, n_classes, max_batch=max_batch,
                           backend=backend, engine=engine)
         fns.append(mesh_placed(eng.scheduler_executor(), mesh))
-    return ReplicaSet(fns, policy=policy, n_features=net.n_inputs)
+    return ReplicaSet(fns, policy=policy, n_features=net.n_inputs,
+                      exec_seed_us=exec_seed_us)

@@ -47,6 +47,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .clock import SystemClock
 from .metrics import ServeMetrics
 
@@ -82,6 +84,7 @@ class ServeFuture:
         self._exc: Optional[BaseException] = None
         self.t_enqueue_us: float = 0.0
         self.t_done_us: float = 0.0
+        self.trace_id: Optional[int] = None
 
     def done(self) -> bool:
         return self._ev.is_set()
@@ -116,6 +119,7 @@ class ServeRequest:
     deadline_us: float = math.inf   # absolute SLO deadline (inf = none)
     seq: int = 0                    # admission order (EDF tie-break)
     queued: bool = False            # live in a BoundedPriorityQueue lane
+    trace_id: Optional[int] = None  # async-span id (None when untraced)
 
     def slack_us(self, now_us: float) -> float:
         """Remaining budget; negative once the deadline has passed."""
@@ -261,6 +265,11 @@ class SchedConfig:
     # lane 1 in 1 ms. None (or a missing lane entry) = no deadline;
     # an explicit ``submit(..., deadline_us=...)`` always wins.
     lane_slo_us: Optional[Tuple[float, ...]] = None
+    # Calibrated batch-execution estimate (µs) seeding the flush-margin
+    # EWMA, e.g. ``LatencyTable.estimate_plan_us`` from
+    # ``repro.obs.kernelprof`` — without it the first deadline-margin
+    # flush decisions run on a cold 0 µs estimate.
+    exec_estimate_us: Optional[float] = None
 
     def slo_for_lane(self, lane: int) -> float:
         if self.lane_slo_us is None or lane >= len(self.lane_slo_us):
@@ -295,18 +304,27 @@ class MicroBatchScheduler:
 
     def __init__(self, executor: Callable[[np.ndarray], Sequence],
                  cfg: Optional[SchedConfig] = None, clock=None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None, tracer=None):
         self.executor = executor
         self.cfg = cfg or SchedConfig()
         self.clock = clock or SystemClock()
         self.metrics = metrics or ServeMetrics(max_batch=self.cfg.max_batch)
+        # tracer and scheduler should share a clock so span timestamps
+        # line up with enqueue stamps; callers constructing a
+        # SpanTracer(clock=...) around the same clock get exact nesting
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None and hasattr(executor, "set_tracer"):
+            executor.set_tracer(tracer)
         self.queue = BoundedPriorityQueue(self.cfg.max_queue,
                                           self.cfg.n_priorities)
         self._cond = threading.Condition()
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
         self._shutdown = False
-        self._exec_ewma_us = 0.0        # smoothed batch execution time
+        # smoothed batch execution time; a calibrated kernelprof
+        # estimate seeds it so the first flush margins aren't cold
+        self._exec_ewma_us = float(self.cfg.exec_estimate_us or 0.0)
+        self._ewma_seeded = self.cfg.exec_estimate_us is not None
         self._n_execs = 0
         self._n_features = getattr(executor, "n_features", None)
         try:
@@ -318,6 +336,14 @@ class MicroBatchScheduler:
     # -- admission ---------------------------------------------------------
     def _payload_width(self, x: np.ndarray) -> int:
         return 1 if x.ndim == 0 else int(x.shape[-1])
+
+    def _note_reject(self, reason: str) -> None:
+        """Count an admission reject and mark it in the trace (a
+        rejected request never gets an async span — the instant is its
+        whole story)."""
+        self.metrics.record_reject(reason)
+        self.tracer.instant("reject", cat="admission",
+                            args={"reason": reason})
 
     def submit(self, x, priority: int = 0,
                deadline_us: Optional[float] = None) -> ServeFuture:
@@ -336,12 +362,12 @@ class MicroBatchScheduler:
         x = np.asarray(x)
         rows = 1 if x.ndim <= 1 else x.shape[0]
         if rows > self.cfg.max_batch:
-            self.metrics.record_reject(RejectReason.TOO_LARGE)
+            self._note_reject(RejectReason.TOO_LARGE)
             raise RequestRejected(
                 RejectReason.TOO_LARGE,
                 f"{rows} rows > max_batch {self.cfg.max_batch}")
         if x.ndim > 2:
-            self.metrics.record_reject(RejectReason.BAD_SHAPE)
+            self._note_reject(RejectReason.BAD_SHAPE)
             raise RequestRejected(
                 RejectReason.BAD_SHAPE,
                 f"payload rank {x.ndim} > 2 (want (features,) or "
@@ -349,7 +375,7 @@ class MicroBatchScheduler:
         budget = (self.cfg.slo_for_lane(priority)
                   if deadline_us is None else float(deadline_us))
         if budget <= 0:
-            self.metrics.record_reject(RejectReason.DEADLINE_EXCEEDED)
+            self._note_reject(RejectReason.DEADLINE_EXCEEDED)
             raise RequestRejected(
                 RejectReason.DEADLINE_EXCEEDED,
                 f"non-positive deadline budget {budget} µs")
@@ -360,15 +386,18 @@ class MicroBatchScheduler:
         req = ServeRequest(x=x, rows=rows, priority=priority,
                            t_enqueue_us=now, future=fut,
                            deadline_us=now + budget)
+        tracer = self.tracer
+        if tracer.enabled:
+            req.trace_id = fut.trace_id = tracer.new_id()
         with self._cond:
             if self._shutdown:
-                self.metrics.record_reject(RejectReason.SHUTDOWN)
+                self._note_reject(RejectReason.SHUTDOWN)
                 raise RequestRejected(RejectReason.SHUTDOWN)
             # width check + first-payload pinning share the lock, so two
             # concurrent first submits cannot both pass with different
             # widths and poison the same batch's concatenation
             if self._n_features is not None and width != self._n_features:
-                self.metrics.record_reject(RejectReason.BAD_SHAPE)
+                self._note_reject(RejectReason.BAD_SHAPE)
                 raise RequestRejected(
                     RejectReason.BAD_SHAPE,
                     f"payload width {width} != executor width "
@@ -376,11 +405,22 @@ class MicroBatchScheduler:
             try:
                 self.queue.push(req)
             except RequestRejected as e:
-                self.metrics.record_reject(e.reason)
+                self._note_reject(e.reason)
                 raise
             if self._n_features is None and x.ndim > 0:
                 self._n_features = width
             self.metrics.record_enqueue(len(self.queue), now)
+            if req.trace_id is not None:
+                # opened while still holding the lock: the flush thread
+                # can only pop this request (and record its span ends)
+                # after we release, so begin always precedes end in the
+                # ring buffer
+                dl = (None if not math.isfinite(req.deadline_us)
+                      else req.deadline_us)
+                tracer.abegin("request", req.trace_id, ts_us=now,
+                              args={"lane": priority, "rows": rows,
+                                    "deadline_us": dl})
+                tracer.abegin("queue_wait", req.trace_id, ts_us=now)
             self._cond.notify_all()
         return fut
 
@@ -394,47 +434,84 @@ class MicroBatchScheduler:
                                                 self._exec_ewma_us)
 
     def _shed(self, expired: List[ServeRequest], now_us: float) -> None:
+        tracer = self.tracer
         for r in expired:
             r.future.t_done_us = now_us
             self.metrics.record_shed(r.priority)
+            if r.trace_id is not None:
+                tracer.aend("queue_wait", r.trace_id,
+                            args={"flush_reason": "shed"})
+                tracer.aend("request", r.trace_id,
+                            args={"outcome": "shed", "lane": r.priority})
             r.future.set_exception(RequestRejected(
                 RejectReason.DEADLINE_EXCEEDED,
                 f"deadline missed by {now_us - r.deadline_us:.1f} µs "
                 f"before dispatch (lane {r.priority})"))
 
     def _due_batch(self, now_us: float, force: bool
-                   ) -> Tuple[List[ServeRequest], List[ServeRequest]]:
-        """(expired-to-shed, batch-to-run) at ``now_us``. Expired
-        requests are always removed — on the forced shutdown drain too,
-        a late result is still a wrong result."""
+                   ) -> Tuple[List[ServeRequest], List[ServeRequest], str]:
+        """(expired-to-shed, batch-to-run, flush-reason) at ``now_us``.
+        Expired requests are always removed — on the forced shutdown
+        drain too, a late result is still a wrong result.
+
+        The flush reason records *which* trigger fired: ``size`` (the
+        batch is row-full), ``max_wait`` (oldest request hit the age
+        cap), ``deadline`` (tightest SLO deadline minus the execution
+        estimate), ``drain`` (forced flush). Size wins ties — it is the
+        trigger that would have fired regardless of time."""
         with self._cond:
             expired = self.queue.shed_expired(now_us)
             if len(self.queue) == 0:
-                return expired, []
+                return expired, [], ""
             full = self.queue.rows >= self.cfg.max_batch
+            oldest = self.queue.oldest_enqueue_us()
+            age_due = (oldest is not None
+                       and now_us >= oldest + self.cfg.max_wait_us)
             flush_at = self.queue.earliest_flush_us(self.cfg.max_wait_us,
                                                     self._exec_ewma_us)
             due = flush_at is not None and now_us >= flush_at
             if not (full or due or force):
-                return expired, []
-            return expired, self.queue.pop_batch(self.cfg.max_batch)
+                return expired, [], ""
+            reason = ("size" if full else
+                      "max_wait" if age_due else
+                      "deadline" if due else "drain")
+            return expired, self.queue.pop_batch(self.cfg.max_batch), reason
 
-    def _run_batch(self, batch: List[ServeRequest]) -> None:
+    def _run_batch(self, batch: List[ServeRequest],
+                   reason: str = "drain") -> None:
+        tracer = self.tracer
         rows = sum(r.rows for r in batch)
+        t_form = self.clock.now_us()
+        if tracer.enabled:
+            for r in batch:
+                if r.trace_id is not None:
+                    # close the queue phase: the batch-formation end
+                    # carries the flush reason and the measured wait
+                    tracer.aend("queue_wait", r.trace_id, args={
+                        "flush_reason": reason,
+                        "wait_us": t_form - r.t_enqueue_us})
         xs = [r.x if r.x.ndim > 1 else r.x[None] for r in batch]
-        xcat = np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
+        with tracer.span("batch_form", cat="batch", args={
+                "flush_reason": reason, "rows": rows,
+                "n_requests": len(batch)}):
+            xcat = np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
         tightest = min(r.deadline_us for r in batch)
         t0 = self.clock.now_us()
         try:
-            if self._pass_deadline:
-                res = self.executor(xcat, deadline_us=tightest)
-            else:
-                res = self.executor(xcat)
+            with tracer.span("exec", cat="exec", args={"rows": rows}):
+                if self._pass_deadline:
+                    res = self.executor(xcat, deadline_us=tightest)
+                else:
+                    res = self.executor(xcat)
         except Exception as e:              # fail the whole batch, keep serving
             now = self.clock.now_us()
             self.metrics.record_error(len(batch))
             for r in batch:
                 r.future.t_done_us = now
+                if r.trace_id is not None:
+                    tracer.aend("request", r.trace_id,
+                                args={"outcome": "error",
+                                      "error": type(e).__name__})
                 r.future.set_exception(e)
             return
         now = self.clock.now_us()
@@ -442,19 +519,26 @@ class MicroBatchScheduler:
         dt = now - t0
         self._n_execs += 1
         self._exec_ewma_us = (dt if self._n_execs == 1
+                              and not self._ewma_seeded
                               else 0.8 * self._exec_ewma_us + 0.2 * dt)
         res = np.asarray(res)
         assert res.shape[0] == rows, (
             f"executor returned {res.shape[0]} rows for a {rows}-row batch")
-        off = 0
-        for r in batch:
-            out = res[off: off + r.rows]
-            off += r.rows
-            r.future.t_done_us = now
-            self.metrics.record_done(now - r.t_enqueue_us, now,
-                                     lane=r.priority,
-                                     deadline_us=r.deadline_us)
-            r.future.set_result(out[0] if r.x.ndim <= 1 else out)
+        with tracer.span("scatter", cat="sched",
+                         args={"n_requests": len(batch)}):
+            off = 0
+            for r in batch:
+                out = res[off: off + r.rows]
+                off += r.rows
+                r.future.t_done_us = now
+                self.metrics.record_done(now - r.t_enqueue_us, now,
+                                         lane=r.priority,
+                                         deadline_us=r.deadline_us)
+                if r.trace_id is not None:
+                    tracer.aend("request", r.trace_id, args={
+                        "outcome": "ok",
+                        "latency_us": now - r.t_enqueue_us})
+                r.future.set_result(out[0] if r.x.ndim <= 1 else out)
 
     def poll(self, now_us: Optional[float] = None, force: bool = False) -> int:
         """Run every batch due at ``now_us`` (clock-now if omitted);
@@ -464,14 +548,14 @@ class MicroBatchScheduler:
         done = 0
         while True:
             now = self.clock.now_us() if now_us is None else now_us
-            expired, batch = self._due_batch(now, force)
+            expired, batch, reason = self._due_batch(now, force)
             self._shed(expired, now)
             done += len(expired)
             if not batch:
                 if expired:
                     continue        # shedding may have exposed a due batch
                 return done
-            self._run_batch(batch)
+            self._run_batch(batch, reason)
             done += len(batch)
 
     def drain(self) -> int:
@@ -539,5 +623,10 @@ class MicroBatchScheduler:
         for r in leftovers:             # drain=False (or raced remnants)
             r.future.t_done_us = now
             self.metrics.record_reject(RejectReason.SHUTDOWN)
+            if r.trace_id is not None:
+                self.tracer.aend("queue_wait", r.trace_id,
+                                 args={"flush_reason": "drain"})
+                self.tracer.aend("request", r.trace_id,
+                                 args={"outcome": "shutdown"})
             r.future.set_exception(RequestRejected(
                 RejectReason.SHUTDOWN, "scheduler stopped before dispatch"))

@@ -13,7 +13,6 @@ Two request kinds, matching the paper's deployment story:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -124,7 +123,8 @@ class LogicEngine:
 
     def serve_queue(self, requests: List[np.ndarray], clock=None,
                     deadline_us: Optional[float] = None,
-                    lane_slo_us: Optional[Tuple[float, ...]] = None
+                    lane_slo_us: Optional[Tuple[float, ...]] = None,
+                    tracer=None
                     ) -> Tuple[List[np.ndarray], Dict[str, float]]:
         """Micro-batched serving of a request list; returns per-request
         results + latency stats (p50/p95/p99/mean, µs).
@@ -150,7 +150,7 @@ class LogicEngine:
                           max_queue=max(2 * len(requests), 1),
                           n_priorities=1, lane_slo_us=lane_slo_us)
         sched = MicroBatchScheduler(self.scheduler_executor(), cfg,
-                                    clock=clock)
+                                    clock=clock, tracer=tracer)
         futs: List[Any] = []
         for r in requests:
             r = np.asarray(r)
@@ -215,11 +215,13 @@ class LMEngine:
 
     def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
                  max_seq: int = 512, max_pending: Optional[int] = None,
-                 n_priorities: int = 2):
+                 n_priorities: int = 2, clock=None):
+        from repro.serve.clock import SystemClock
         from repro.serve.sched import BoundedPriorityQueue
 
         self.cfg = cfg
         self.params = params
+        self.clock = clock or SystemClock()
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.cache = lm.init_cache(cfg, n_slots, max_seq)
@@ -252,7 +254,7 @@ class LMEngine:
         from repro.serve.sched import ServeFuture, ServeRequest
 
         fut = ServeFuture()
-        fut.t_enqueue_us = time.perf_counter() * 1e6
+        fut.t_enqueue_us = self.clock.now_us()
         self.admission.push(ServeRequest(
             x=req, rows=1, priority=priority,
             t_enqueue_us=fut.t_enqueue_us, future=fut,
@@ -327,7 +329,7 @@ class LMEngine:
         while len(self.admission) or any(a is not None for a in self.active):
             # shed waiters whose queueing budget expired before a slot
             # freed up — a typed reject beats a silently late admission
-            now_us = time.perf_counter() * 1e6
+            now_us = self.clock.now_us()
             for expired in self.admission.shed_expired(now_us):
                 expired.future.t_done_us = now_us
                 expired.future.set_exception(RequestRejected(
@@ -359,7 +361,7 @@ class LMEngine:
                     done.append(req)
                     self.active[i] = None
                     if sreqs[i] is not None:
-                        sreqs[i].future.t_done_us = time.perf_counter() * 1e6
+                        sreqs[i].future.t_done_us = self.clock.now_us()
                         sreqs[i].future.set_result(req)
                         sreqs[i] = None
         return done

@@ -363,6 +363,11 @@ class BitplaneNetwork:
         self.mapped = mapped
         self.engine = engine
         self.interpret = interpret
+        # lazy import: this module loads during repro.serve/__init__
+        # (via aggregate), while repro.obs pulls repro.serve.metrics —
+        # a module-level import here would close an import cycle
+        from repro.obs.trace import NULL_TRACER
+        self.tracer = NULL_TRACER
         self._plan = _compile_plan(mapped)
         self._device: Optional[_PallasExecutor] = None
         self.in_bits = net.in_spec.code_bits
@@ -432,15 +437,24 @@ class BitplaneNetwork:
         words go straight to the device and only the scattered argmax
         returns; on numpy it is the host fold + decode."""
         if self.engine == "pallas":
-            return self.device.classify_words(pi_words, n_rows, n_classes)
-        out_words = execute_packed(self.mapped, pi_words, plan=self._plan)
-        out_bits = unpack_bits(out_words, n_rows)
-        out_codes = np.zeros((n_rows, out_bits.shape[0] // self.out_bits),
-                             np.int64)
-        for b in range(self.out_bits):
-            out_codes |= out_bits[b::self.out_bits].T.astype(np.int64) << b
-        vals = self.out_levels[out_codes]
-        return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
+            with self.tracer.span("lut_eval", cat="kernel", args={
+                    "rows": n_rows, "engine": "pallas",
+                    "n_levels": len(self._plan.levels)}):
+                return self.device.classify_words(pi_words, n_rows,
+                                                  n_classes)
+        with self.tracer.span("lut_eval", cat="kernel",
+                              args={"rows": n_rows, "engine": "numpy"}):
+            out_words = execute_packed(self.mapped, pi_words,
+                                       plan=self._plan)
+            out_bits = unpack_bits(out_words, n_rows)
+            out_codes = np.zeros(
+                (n_rows, out_bits.shape[0] // self.out_bits), np.int64)
+            for b in range(self.out_bits):
+                out_codes |= (out_bits[b::self.out_bits].T.astype(np.int64)
+                              << b)
+            vals = self.out_levels[out_codes]
+            return np.argmax(vals[..., :n_classes],
+                             axis=-1).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
