@@ -127,6 +127,20 @@ def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
         for key, direction in keys:
             if key in base:
                 out[f"serve/sequential/{key}"] = (float(base[key]), direction)
+        # tracer overhead: the honest cost of observability, measured by
+        # loadgen running the same closed-loop section with a live
+        # SpanTracer vs NULL_TRACER. Lower is better; the throughputs
+        # themselves are machine-relative and excluded. The gate tracks
+        # the min-of-pairs lower bound, not the median — the median
+        # swings with one-sided scheduler jitter (0-15% on a loaded
+        # box) while the lower bound isolates the systematic cost.
+        to = res.get("tracer_overhead") or {}
+        if "overhead_pct_lb" in to:
+            out["serve/tracer/overhead_pct_lb"] = (
+                float(to["overhead_pct_lb"]), LOWER)
+        elif "overhead_pct" in to:
+            out["serve/tracer/overhead_pct"] = (
+                float(to["overhead_pct"]), LOWER)
         for b, rec in (res.get("backends") or {}).items():
             for mode, r in rec.items():
                 if not isinstance(r, dict):
@@ -160,10 +174,18 @@ def extract_metrics(doc: dict) -> Dict[str, Tuple[float, str]]:
 
 
 _RATE_SUFFIXES = ("deadline_miss_rate", "slo_attainment")
+# percent-scale metrics ([0, 100]): same floor logic as rates but in
+# percentage points (floor = 100 * min_rate), so a 0.3% -> 1.2%
+# tracer-overhead wobble is noise while 0.3% -> 40% still fails
+_PCT_SUFFIXES = ("overhead_pct", "overhead_pct_lb")
 
 
 def _is_rate(name: str) -> bool:
     return name.endswith(_RATE_SUFFIXES)
+
+
+def _is_pct(name: str) -> bool:
+    return name.endswith(_PCT_SUFFIXES)
 
 
 def compare(base: Dict[str, Tuple[float, str]],
@@ -194,6 +216,9 @@ def compare(base: Dict[str, Tuple[float, str]],
         fv = fresh[name][0]
         if _is_rate(name):
             cb, cf = max(bv, min_rate), max(fv, min_rate)
+        elif _is_pct(name):
+            cb = max(bv, 100.0 * min_rate)
+            cf = max(fv, 100.0 * min_rate)
         else:
             if direction == LOWER and max(bv, fv) < min_us:
                 continue                     # sub-floor: timer noise
@@ -208,7 +233,8 @@ def compare(base: Dict[str, Tuple[float, str]],
     # drift estimates the uniform machine-speed factor — from timing
     # metrics only; rates are fractions of offered load and neither
     # inform nor receive the correction
-    timing = [v for n, v in effective.items() if not _is_rate(n)]
+    timing = [v for n, v in effective.items()
+              if not _is_rate(n) and not _is_pct(n)]
     if normalize and len(timing) >= 3:       # too few metrics to estimate
         drift = median(timing)
         drift = min(max(drift, 1.0 / max_drift), max_drift)
@@ -219,7 +245,8 @@ def compare(base: Dict[str, Tuple[float, str]],
             only_one.append(name)
             continue
         bv, fv, ratio, direction = payload
-        residual = effective[name] / (1.0 if _is_rate(name) else drift)
+        residual = effective[name] / (
+            1.0 if _is_rate(name) or _is_pct(name) else drift)
         row = (name, bv, fv, ratio, residual, direction)
         checked.append(row)
         if residual > 1.0 + tolerance:

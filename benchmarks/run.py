@@ -56,6 +56,10 @@ def main() -> None:
                          "serve,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="fewer training steps (CI mode)")
+    ap.add_argument("--history", action="store_true",
+                    help="append this run's BENCH_*.json metrics to the "
+                         "benchmarks/results/history.jsonl trajectory "
+                         "ledger (idempotent per git sha + timestamp)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -139,6 +143,14 @@ def main() -> None:
     with open(os.path.join(RESULTS_DIR, "bench_results.json"), "w") as f:
         json.dump(all_results, f, indent=1, default=str)
     _write_bench_json(all_results)
+    if args.history:
+        from benchmarks import history
+        for section in _ROWS:
+            path = os.path.join(REPO_ROOT, f"BENCH_{section}.json")
+            entry = history.append_file(path)
+            if entry is not None:
+                print(f"[bench] history: {section} -> "
+                      f"{len(entry['metrics'])} metric(s) appended")
 
 
 if __name__ == "__main__":

@@ -77,7 +77,8 @@ def main(argv=None) -> int:
     reports = []
 
     if "trace" in wanted:
-        from .tracecheck import (check_trace, check_trace_file,
+        from .tracecheck import (check_phase_reconciliation, check_trace,
+                                 check_trace_file,
                                  synthetic_trace_events)
         if args.trace_file:
             reports.append(check_trace_file(args.trace_file))
@@ -85,7 +86,9 @@ def main(argv=None) -> int:
             print("[check] no --trace-file: validating a synthetic "
                   "FakeClock scheduler trace ...", flush=True)
             events, n_dropped = synthetic_trace_events()
-            reports.append(check_trace(events, n_dropped=n_dropped))
+            rep = check_trace(events, n_dropped=n_dropped)
+            reports.append(check_phase_reconciliation(
+                events, n_dropped=n_dropped, report=rep))
 
     if wanted & {"concurrency", "srclint"}:
         static = CheckReport("static")

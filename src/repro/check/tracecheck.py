@@ -165,6 +165,63 @@ def check_trace(events: Iterable, n_dropped: int = 0,
     return rep
 
 
+def check_phase_reconciliation(events: Iterable, n_dropped: int = 0,
+                               tol: float = None,
+                               report: Optional[CheckReport] = None
+                               ) -> CheckReport:
+    """Validate the phase-reconciliation invariant over a trace: for
+    every completed (``outcome == "ok"``) request, the attributed phase
+    times must account for its end-to-end latency —
+
+        ``queue_wait + batch_form + exec ~= latency_us``
+
+    within the analyzer tolerance (``repro.obs.analyze.DEFAULT_TOL``).
+    A request whose phases do not sum to its latency means a span is
+    missing, double-counted, or stamped with the wrong clock — the
+    trace can no longer answer "where did the time go". Downgraded to a
+    warning when the ring buffer dropped events (a truncated trace
+    legitimately loses the spans the sum needs), or while the trace as
+    a whole stays within the analyzer's straggler allowance (an OS
+    preemption between two clock stamps inflates one request's gap;
+    a real mis-attribution shows up across every request)."""
+    from repro.obs.analyze import DEFAULT_TOL, analyze_events
+    rep = report if report is not None else CheckReport("trace")
+    tol = DEFAULT_TOL if tol is None else tol
+    truncated = n_dropped > 0
+
+    rpt = analyze_events(events, tol=tol)
+    recon = rpt.reconciliation()
+    rep.checked += recon["n_checked"]
+    rep.info["phase_recon"] = recon
+    if recon["n_checked"] == 0:
+        if not truncated and rpt.requests:
+            rep.warn(PASS, "phase-recon-empty",
+                     f"{len(rpt.requests)} request(s) in trace but none "
+                     "completed ok — reconciliation not checkable",
+                     "phase reconciliation")
+        return rep
+    for r in rpt.requests:
+        if r.outcome != "ok":
+            continue
+        err = r.recon_error()
+        if err is None or err <= tol:
+            continue
+        attributed = r.wait_us + r.batch.form_us + r.batch.exec_us
+        msg = (f"request {r.sid}: phases sum to {attributed:.1f} us "
+               f"but latency is {r.latency_us:.1f} us "
+               f"({err:.1%} > {tol:.0%} tolerance)")
+        if truncated:
+            rep.warn(PASS, "phase-reconcile", msg + " (ring buffer "
+                     f"dropped {n_dropped} events)", f"request {r.sid}")
+        elif recon["ok"]:
+            rep.warn(PASS, "phase-reconcile", msg + " (within the "
+                     f"{recon['n_allowed']}-straggler allowance)",
+                     f"request {r.sid}")
+        else:
+            rep.error(PASS, "phase-reconcile", msg, f"request {r.sid}")
+    return rep
+
+
 def check_trace_file(path: str,
                      report: Optional[CheckReport] = None) -> CheckReport:
     """Validate an exported trace file (Chrome JSON or JSONL)."""
@@ -180,7 +237,8 @@ def check_trace_file(path: str,
         rep.warn(PASS, "empty-trace", "trace file contains no events",
                  path)
     rep.info["file"] = path
-    return check_trace(events, report=rep)
+    check_trace(events, report=rep)
+    return check_phase_reconciliation(events, report=rep)
 
 
 def synthetic_trace_events() -> Tuple[List, int]:

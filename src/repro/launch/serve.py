@@ -34,7 +34,7 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                 engine: str = "numpy", sched: bool = False,
                 replicas: int = 1, qps: float = None, loadgen: str = None,
                 slo_us: tuple = None, check: bool = False,
-                trace: str = None):
+                trace: str = None, metrics_port: int = None):
     from repro.configs.jsc import JSC
     from repro.data.jsc import train_test
     from repro.models.mlp import to_logic
@@ -70,6 +70,18 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                 raise SystemExit(2)
     (_, _), (xte, yte) = train_test()
 
+    # pull-based metrics endpoint (Prometheus text exposition on
+    # /metrics, raw snapshot on /metrics.json), alive for the duration
+    # of the serving run; daemon thread, so an exception path cannot
+    # wedge process exit
+    mserver = None
+    registry = None
+    if metrics_port is not None:
+        from repro.obs import MetricsRegistry, MetricsServer
+        registry = MetricsRegistry()
+        mserver = MetricsServer(registry, port=metrics_port)
+        print(f"[serve] metrics endpoint: {mserver.url}")
+
     if loadgen:                         # full benchmark harness
         if _REPO_ROOT not in sys.path:
             sys.path.insert(0, _REPO_ROOT)
@@ -77,7 +89,7 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
         out = lg.run(fast=True, backends=(backend,), n_requests=n_requests,
                      qps=qps, loadgen=loadgen, n_replicas=replicas,
                      steps=train_steps, engine=engine, slo_us=slo_us,
-                     trace=trace)
+                     trace=trace, registry=registry)
         rec = out["backends"][backend]
         mode = "open_loop" if "open_loop" in rec else "closed_loop"
         print(f"[serve] {mode}: {rec[mode]['qps']:.0f} qps "
@@ -90,6 +102,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                       f"attainment={lr['slo_attainment']:.3f} "
                       f"miss_rate={lr['deadline_miss_rate']:.3f} "
                       f"shed={lr['shed']} p99={lr['p99_us']:.0f}us")
+        if mserver is not None:
+            mserver.close()
         return rec
 
     tracer = None
@@ -112,7 +126,16 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                                   max_queue=4 * n_requests * 64,
                                   n_priorities=max(2, len(slo_us or ())),
                                   lane_slo_us=slo_us),
-            tracer=tracer).start()
+            tracer=tracer)
+        if registry is not None:        # live pull endpoint content
+            from repro.obs import WindowedMetrics
+            s.metrics.publish(registry, "serve")
+            if hasattr(executor, "publish"):
+                executor.publish(registry)
+            wm = WindowedMetrics()
+            s.metrics.add_sink(wm)
+            wm.publish(registry, "windows")
+        s.start()
         futs = [s.submit(xte[i % xte.shape[0]])
                 for i in range(n_requests * 64)]
         s.stop(drain=True)
@@ -135,6 +158,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
               f"occ={snap['mean_batch_occupancy']:.2f} "
               f"shed={snap['shed']} "
               f"miss_rate={snap['deadline_miss_rate']:.3f}")
+        if mserver is not None:
+            mserver.close()
         return snap
 
     reqs = [xte[i * 64: (i + 1) * 64] for i in range(n_requests)]
@@ -147,6 +172,8 @@ def serve_logic(jsc_name: str, train_steps: int, n_requests: int,
                         == yte[: sum(len(r) for r in reqs)]))
     print(f"[serve] {n_requests} requests: acc={acc:.4f} "
           f"p50={stats['p50_us']:.1f}us p95={stats['p95_us']:.1f}us")
+    if mserver is not None:
+        mserver.close()
     return stats
 
 
@@ -225,6 +252,12 @@ def main(argv=None):
                          "write a Chrome trace-event JSON (open in "
                          "ui.perfetto.dev) with the metrics-registry "
                          "snapshot embedded as otherData")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a pull-based metrics endpoint on this "
+                         "port for the duration of the run: Prometheus "
+                         "text exposition on /metrics, raw registry "
+                         "snapshot on /metrics.json (0 = ephemeral port, "
+                         "printed at startup)")
     ap.add_argument("--check", action="store_true",
                     help="repro.check preflight before serving (bitplane "
                          "backend): netlist lint, DevicePlan validation, "
@@ -238,7 +271,7 @@ def main(argv=None):
                     backend=args.backend, engine=args.engine,
                     sched=args.sched, replicas=args.replicas, qps=args.qps,
                     loadgen=args.loadgen, slo_us=slo_us, check=args.check,
-                    trace=args.trace)
+                    trace=args.trace, metrics_port=args.metrics_port)
     else:
         serve_lm(args.arch, args.smoke, args.requests, args.max_new)
 

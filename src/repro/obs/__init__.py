@@ -17,7 +17,22 @@ NullaNet Tiny's whole pitch is latency, so latency has to be visible
                measured ``(level_width, k, fanin) -> µs`` table, written
                as an artifact so ``least_slack`` dispatch and mapping
                search consume calibrated estimates instead of
-               cold-start EWMA.
+               cold-start EWMA;
+  analyze    — trace artifacts back into per-request phase breakdowns
+               ("where did the time go"), reconciliation against the
+               scheduler-stamped latency, and trace-vs-trace diffing
+               (``python -m repro.obs.analyze --trace ...``);
+  window     — streaming tumbling/sliding-window aggregation: per-lane
+               QPS / p50 / p99 / SLO-attainment *time series* instead
+               of one end-of-run snapshot;
+  slo        — multi-window SLO burn-rate monitor with alert callbacks,
+               the scheduler's optional degradation hook;
+  online     — sampled real-traffic device timings blended back into
+               the ``LatencyTable`` so flush margins track the live
+               device;
+  promexport — Prometheus text-exposition rendering of a registry
+               snapshot plus a stdlib pull endpoint
+               (``launch.serve --metrics-port``).
 
 ``benchmarks/loadgen.py --trace PATH`` and
 ``repro.launch.serve --trace PATH`` wire the tracer through the whole
@@ -29,8 +44,14 @@ from .trace import (FLUSH_REASONS, NULL_TRACER, NullTracer, SpanTracer,
 from .export import (load_trace_events, to_chrome_trace, to_jsonl,
                      write_chrome_trace, write_jsonl)
 from .registry import Counter, Gauge, MetricsRegistry
-from .kernelprof import (LatencyTable, measure_level_grid, profile_plan,
-                         build_latency_table)
+from .kernelprof import (EmptyLatencyTable, LatencyTable,
+                         LatencyTableError, measure_level_grid,
+                         profile_plan, build_latency_table)
+from .analyze import TraceReport, analyze_events, analyze_trace
+from .window import BucketRing, WindowedMetrics
+from .slo import BurnAlert, BurnRateMonitor
+from .online import OnlineProfiler
+from .promexport import MetricsServer, to_prometheus_text
 
 __all__ = [
     "FLUSH_REASONS", "NULL_TRACER", "NullTracer", "SpanTracer",
@@ -38,6 +59,11 @@ __all__ = [
     "load_trace_events", "to_chrome_trace", "to_jsonl",
     "write_chrome_trace", "write_jsonl",
     "Counter", "Gauge", "MetricsRegistry",
-    "LatencyTable", "measure_level_grid", "profile_plan",
-    "build_latency_table",
+    "EmptyLatencyTable", "LatencyTable", "LatencyTableError",
+    "measure_level_grid", "profile_plan", "build_latency_table",
+    "TraceReport", "analyze_events", "analyze_trace",
+    "BucketRing", "WindowedMetrics",
+    "BurnAlert", "BurnRateMonitor",
+    "OnlineProfiler",
+    "MetricsServer", "to_prometheus_text",
 ]

@@ -39,6 +39,14 @@ DEFAULT_WIDTHS = (4, 16, 64)
 DEFAULT_FANINS = (2, 4, 6)
 
 
+class LatencyTableError(ValueError):
+    """Typed error for latency-table estimation failures."""
+
+
+class EmptyLatencyTable(LatencyTableError):
+    """Estimation was asked of a table holding no measurements."""
+
+
 def _time_us(fn, *args, iters: int = 3) -> float:
     """Wall µs per call, first (compile) call excluded."""
     import jax
@@ -179,16 +187,37 @@ def profile_plan(dplan, w_words: int = 128, iters: int = 3,
 class LatencyTable:
     """Measured ``(level_width, k, fanin) -> device µs`` lookup.
 
-    Estimation is nearest-fanin, then linear interpolation (and linear
-    extrapolation, floored at 0) in ``level_width`` — per-level LUT
-    work is linear in width for a fixed word tile, so the model matches
-    the kernel's cost shape.
+    Estimation is nearest-fanin (which clamps out-of-sweep fanins to
+    the nearest calibrated one), then linear interpolation in
+    ``level_width``. Queries **outside the calibrated width sweep are
+    clamped, never slope-extrapolated**: below the grid the smallest
+    measurement applies (``np.interp``'s edge clamp); above it the
+    largest measurement scales proportionally per LUT
+    (``us[-1] * width / ws[-1]``) — per-level work is linear in width
+    for a fixed word tile, and a two-point slope can go negative or
+    explode on a noisy sweep, which once fed the flush margin a
+    nonsense estimate.
+
+    ``scale`` is an online correction factor: calibration happens on an
+    idle device, serving happens on a busy one, and
+    ``repro.obs.online.OnlineProfiler`` blends the live measured/
+    predicted ratio into it so scheduler flush margins track the
+    machine as it actually is.
     """
 
     rows: List[Dict]
     meta: Dict = dataclasses.field(default_factory=dict)
+    scale: float = 1.0              # online measured/predicted blend
+
+    SCALE_MIN = 0.1
+    SCALE_MAX = 10.0
 
     def _grid_rows(self, k: int) -> List[Dict]:
+        if not self.rows:
+            raise EmptyLatencyTable(
+                "latency table holds no measurements — run "
+                "build_latency_table (or load a saved artifact) before "
+                "estimating")
         rows = [r for r in self.rows
                 if r["k"] == k and r["source"] == "grid"]
         return rows or [r for r in self.rows if r["k"] == k]
@@ -197,20 +226,27 @@ class LatencyTable:
                           k: int = 6) -> float:
         rows = self._grid_rows(k)
         if not rows:
-            raise ValueError(f"no measurements for k={k}")
+            raise LatencyTableError(
+                f"no measurements for k={k} "
+                f"(calibrated: {sorted({r['k'] for r in self.rows})})")
+        if not np.isfinite(level_width) or not np.isfinite(fanin):
+            raise LatencyTableError(
+                f"non-finite query (level_width={level_width}, "
+                f"fanin={fanin})")
+        level_width = max(float(level_width), 0.0)
         fans = sorted({r["fanin"] for r in rows})
         near_fan = min(fans, key=lambda f: abs(f - fanin))
         pts = sorted((r["level_width"], r["device_us"]) for r in rows
                      if r["fanin"] == near_fan)
         ws = [p[0] for p in pts]
         us = [p[1] for p in pts]
-        if len(pts) == 1:
-            return us[0] * level_width / max(ws[0], 1)
-        est = float(np.interp(level_width, ws, us))
-        if level_width > ws[-1]:        # linear extrapolation past grid
-            slope = (us[-1] - us[-2]) / max(ws[-1] - ws[-2], 1)
-            est = us[-1] + slope * (level_width - ws[-1])
-        return max(est, 0.0)
+        if level_width > ws[-1]:        # past grid: per-LUT scaling of
+            est = us[-1] * level_width / max(ws[-1], 1)     # the last point
+        elif len(pts) == 1:
+            est = us[0] * level_width / max(ws[0], 1)
+        else:                           # in-grid interp; below-grid clamps
+            est = float(np.interp(level_width, ws, us))     # to us[0]
+        return max(est, 0.0) * self.scale
 
     def estimate_plan_us(self, dplan) -> float:
         """Calibrated whole-netlist estimate: sum of per-level
@@ -221,10 +257,24 @@ class LatencyTable:
                                             k=dplan.k)
         return total
 
+    def blend_scale(self, factor: float, alpha: float = 0.2) -> float:
+        """EWMA-blend a live measured/predicted ratio into ``scale``.
+
+        ``factor`` outside ``[SCALE_MIN, SCALE_MAX]`` is clamped before
+        blending (one absurd sample — a GC pause mid-measurement — must
+        not poison every later estimate); non-finite factors are
+        ignored. Returns the updated scale."""
+        if not np.isfinite(factor) or factor <= 0:
+            return self.scale
+        factor = min(max(float(factor), self.SCALE_MIN), self.SCALE_MAX)
+        self.scale = min(max((1.0 - alpha) * self.scale + alpha * factor,
+                             self.SCALE_MIN), self.SCALE_MAX)
+        return self.scale
+
     # -- artifact ----------------------------------------------------------
     def to_dict(self) -> Dict:
         return {"kind": "lut_level_latency_table", "meta": self.meta,
-                "rows": self.rows}
+                "scale": self.scale, "rows": self.rows}
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:
@@ -237,7 +287,8 @@ class LatencyTable:
             doc = json.load(f)
         if doc.get("kind") != "lut_level_latency_table":
             raise ValueError(f"{path} is not a lut-level latency table")
-        return cls(rows=doc["rows"], meta=doc.get("meta", {}))
+        return cls(rows=doc["rows"], meta=doc.get("meta", {}),
+                   scale=float(doc.get("scale", 1.0)))
 
 
 def build_latency_table(dplan=None, widths: Sequence[int] = DEFAULT_WIDTHS,

@@ -10,16 +10,19 @@ a straight mapping:
     render inside the scheduler's ``exec`` span with no extra plumbing.
   * **async spans** (``ph="b"/"n"/"e"``) — one per *request*, keyed by
     a tracer-allocated id threaded through ``ServeRequest``/
-    ``ServeFuture``: begin at submit, instants for queue/batch
-    milestones (the batch-formation instant carries the flush reason),
-    end at complete/shed/error. Async spans cross threads — submit
-    happens on the client thread, completion on the scheduler thread —
-    which is exactly what thread spans cannot express.
+    ``ServeFuture``: begun retroactively at the request's enqueue
+    timestamp when the scheduler first touches it (dispatch / shed /
+    drain — the submit fast path records nothing but the id), ended at
+    complete/shed/error. Async spans cross threads — enqueue time is
+    stamped on the client thread, all recording happens scheduler-side
+    — which is exactly what thread spans cannot express.
 
-Storage is a preallocated ring buffer: recording is one tuple build and
-one slot write under a lock, old events are overwritten (``n_dropped``
-counts them), and nothing allocates proportional to trace length until
-``events()`` is called. The clock is injectable (``FakeClock`` in
+Storage is a lock-free ring: events are plain tuples appended to a
+``deque(maxlen=capacity)`` and counted with ``itertools.count`` — both
+single C calls, atomic under the GIL — so concurrent recorders never
+serialize on a mutex and old events fall off the ring (``n_dropped``
+counts them). ``TraceEvent`` objects are only materialized on the cold
+``events()`` read path. The clock is injectable (``FakeClock`` in
 tests); when the tracer is disabled — or the shared ``NULL_TRACER`` is
 in use — every record call is a single attribute check, so the serving
 hot path pays ~nothing for the instrumentation points it carries.
@@ -27,6 +30,9 @@ hot path pays ~nothing for the instrumentation points it carries.
 from __future__ import annotations
 
 import threading
+from collections import deque
+from itertools import count as _monotonic_count
+from threading import get_ident
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 # batch flush reasons annotated on batch-formation events; the trace
@@ -65,12 +71,17 @@ class _Span:
         self._args = args
 
     def __enter__(self) -> "_Span":
-        self._t0 = self._tracer.now_us()
+        self._t0 = self._tracer._now()
         return self
 
     def __exit__(self, *exc) -> None:
-        self._tracer.complete(self._name, self._t0, self._tracer.now_us(),
-                              cat=self._cat, args=self._args)
+        # inlined tracer.complete(): X spans fire per batch phase on
+        # the scheduler thread, so every frame saved is throughput
+        tr = self._tracer
+        next(tr._n)
+        tr._buf.append(("X", self._name, self._cat, self._t0,
+                        tr._now() - self._t0, get_ident(), None,
+                        self._args))
 
 
 class _NullSpan:
@@ -106,44 +117,44 @@ class SpanTracer:
         self.clock = clock
         self.enabled = enabled
         self._cap = capacity
-        self._buf: List[Optional[TraceEvent]] = [None] * capacity
-        self._head = 0              # next write slot
-        self._count = 0             # total events ever recorded
-        self._next_id = 0
-        self._lock = threading.Lock()
+        # the hot path is lock-free: deque.append with a maxlen and
+        # next() on an itertools.count are both single C calls, atomic
+        # under the GIL, so 64 submitter threads recording concurrently
+        # never serialize on a mutex. Events are stored as plain tuples
+        # and only materialized into TraceEvent on the cold read path.
+        self._buf: deque = deque(maxlen=capacity)
+        self._n = _monotonic_count()    # total events ever recorded
+        self._now = clock.now_us
+        self._ids = _monotonic_count(1)
+        self._lock = threading.Lock()   # clear only, never the hot path
 
     # -- ids / time --------------------------------------------------------
     def now_us(self) -> float:
-        return self.clock.now_us()
+        return self._now()
 
     def new_id(self) -> int:
-        with self._lock:
-            self._next_id += 1
-            return self._next_id
+        return next(self._ids)
 
     @property
     def n_recorded(self) -> int:
-        return self._count
+        # itertools.count exposes its next value through __reduce__;
+        # reading it there peeks the total without consuming a tick
+        return self._n.__reduce__()[1][0]
 
     @property
     def n_dropped(self) -> int:
-        return max(0, self._count - self._cap)
+        return max(0, self.n_recorded - self._cap)
 
     # -- recording ---------------------------------------------------------
-    def _record(self, ev: TraceEvent) -> None:
-        with self._lock:
-            self._buf[self._head] = ev
-            self._head = (self._head + 1) % self._cap
-            self._count += 1
-
     def complete(self, name: str, t0_us: float, t1_us: float,
                  cat: str = "sched", args: Optional[dict] = None) -> None:
         """A finished thread span with explicit endpoints (for spans
         whose start was stamped on another code path)."""
         if not self.enabled:
             return
-        self._record(TraceEvent("X", name, cat, t0_us, t1_us - t0_us,
-                                threading.get_ident(), None, args))
+        next(self._n)
+        self._buf.append(("X", name, cat, t0_us, t1_us - t0_us,
+                          get_ident(), None, args))
 
     def span(self, name: str, cat: str = "sched",
              args: Optional[dict] = None):
@@ -157,8 +168,9 @@ class SpanTracer:
                 args: Optional[dict] = None) -> None:
         if not self.enabled:
             return
-        self._record(TraceEvent("i", name, cat, self.now_us(), 0.0,
-                                threading.get_ident(), None, args))
+        next(self._n)
+        self._buf.append(("i", name, cat, self._now(), 0.0,
+                          get_ident(), None, args))
 
     def abegin(self, name: str, scope_id: int, cat: str = "request",
                args: Optional[dict] = None,
@@ -166,39 +178,55 @@ class SpanTracer:
         """Begin the async span ``scope_id`` (one per request)."""
         if not self.enabled:
             return
-        self._record(TraceEvent(
-            "b", name, cat, self.now_us() if ts_us is None else ts_us,
-            0.0, threading.get_ident(), scope_id, args))
+        next(self._n)
+        self._buf.append(
+            ("b", name, cat, self._now() if ts_us is None else ts_us,
+             0.0, get_ident(), scope_id, args))
+
+    def abegin_nested(self, outer: str, inner: str, scope_id: int,
+                      ts_us: float, args: Optional[dict] = None) -> None:
+        """Open an outer async span and an inner phase span at the same
+        timestamp with one method dispatch — the submit-path fast path
+        (``request`` + ``queue_wait``); ``args`` lands on the outer."""
+        if not self.enabled:
+            return
+        next(self._n)
+        next(self._n)
+        tid = get_ident()
+        self._buf.append(("b", outer, "request", ts_us, 0.0, tid,
+                          scope_id, args))
+        self._buf.append(("b", inner, "request", ts_us, 0.0, tid,
+                          scope_id, None))
 
     def ainstant(self, name: str, scope_id: int, cat: str = "request",
                  args: Optional[dict] = None) -> None:
         if not self.enabled:
             return
-        self._record(TraceEvent("n", name, cat, self.now_us(), 0.0,
-                                threading.get_ident(), scope_id, args))
+        next(self._n)
+        self._buf.append(("n", name, cat, self._now(), 0.0,
+                          get_ident(), scope_id, args))
 
     def aend(self, name: str, scope_id: int, cat: str = "request",
-             args: Optional[dict] = None) -> None:
+             args: Optional[dict] = None,
+             ts_us: Optional[float] = None) -> None:
         if not self.enabled:
             return
-        self._record(TraceEvent("e", name, cat, self.now_us(), 0.0,
-                                threading.get_ident(), scope_id, args))
+        next(self._n)
+        self._buf.append(("e", name, cat,
+                          self._now() if ts_us is None else ts_us, 0.0,
+                          get_ident(), scope_id, args))
 
     # -- reading -----------------------------------------------------------
     def events(self) -> List[TraceEvent]:
         """Snapshot of the retained events in recording order."""
-        with self._lock:
-            if self._count <= self._cap:
-                raw = self._buf[: self._head]
-            else:
-                raw = self._buf[self._head:] + self._buf[: self._head]
-        return [e for e in raw if e is not None]
+        # list(deque) is one atomic C call; the maxlen ring keeps
+        # oldest-to-newest order by construction
+        return [TraceEvent(*t) for t in list(self._buf)]
 
     def clear(self) -> None:
         with self._lock:
-            self._buf = [None] * self._cap
-            self._head = 0
-            self._count = 0
+            self._buf.clear()
+            self._n = _monotonic_count()
 
 
 class NullTracer:
@@ -236,10 +264,15 @@ class NullTracer:
                ts_us=None) -> None:
         pass
 
+    def abegin_nested(self, outer, inner, scope_id, ts_us,
+                      args=None) -> None:
+        pass
+
     def ainstant(self, name, scope_id, cat="request", args=None) -> None:
         pass
 
-    def aend(self, name, scope_id, cat="request", args=None) -> None:
+    def aend(self, name, scope_id, cat="request", args=None,
+             ts_us=None) -> None:
         pass
 
     def events(self) -> List[TraceEvent]:

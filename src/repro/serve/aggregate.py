@@ -48,6 +48,10 @@ class BitplaneAggregator:
         self.lanes_per_word = WORD_BITS
         self.pad_rows = pad_rows
         self.tracer = NULL_TRACER
+        # online-profiling hook: called with (measured device µs, rows)
+        # after each netlist evaluation when set (see
+        # repro.obs.online.OnlineProfiler.observe)
+        self.on_device_us: Optional[callable] = None
         self.n_features = bitnet.net.n_inputs   # admission width check
         self.n_evals = 0            # lane-words carrying >= 1 real request
         self.n_rows = 0             # request rows served
@@ -95,10 +99,21 @@ class BitplaneAggregator:
         # engine dispatch happens inside classify_packed: the pallas
         # engine ships the words to the device and returns only the
         # scattered per-request argmax; numpy is the host fold + decode.
-        with self.tracer.span("device_exec", cat="exec", args={
-                "rows": true_rows, "engine": self.bitnet.engine}):
-            labels = self.bitnet.classify_packed(pi_words, true_rows,
-                                                 self.n_classes)
+        if self.on_device_us is not None:
+            # timed with wall perf_counter, not the tracer clock: the
+            # profiler wants real device µs even under a FakeClock
+            import time
+            t0 = time.perf_counter()
+            with self.tracer.span("device_exec", cat="exec", args={
+                    "rows": true_rows, "engine": self.bitnet.engine}):
+                labels = self.bitnet.classify_packed(pi_words, true_rows,
+                                                     self.n_classes)
+            self.on_device_us((time.perf_counter() - t0) * 1e6, true_rows)
+        else:
+            with self.tracer.span("device_exec", cat="exec", args={
+                    "rows": true_rows, "engine": self.bitnet.engine}):
+                labels = self.bitnet.classify_packed(pi_words, true_rows,
+                                                     self.n_classes)
         # occupancy is accounted against *real* request rows: lane-words
         # that exist only because of pad_rows shape-stability padding
         # are tracked separately, not counted as served capacity.

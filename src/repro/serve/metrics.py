@@ -130,9 +130,21 @@ class LaneStats:
 
 
 class ServeMetrics:
-    """Thread-safe accumulator for one scheduler (or engine) lifetime."""
+    """Thread-safe accumulator for one scheduler (or engine) lifetime.
+
+    Beyond accumulating, it fans events out to registered **sinks**
+    (``add_sink``): streaming aggregators like
+    ``repro.obs.window.WindowedMetrics`` and the burn-rate monitor in
+    ``repro.obs.slo`` receive ``record_done(lane, latency_us, now_us,
+    ok, rows, deadline_us)`` / ``record_shed(lane, now_us)`` /
+    ``record_batch(rows, exec_us, now_us, occupancy)`` pushes with the
+    scheduler-clock timestamp. Forwarding happens *outside* this
+    object's lock — sinks take their own locks, and a sink must never
+    call back into the scheduler (the scheduler records while holding
+    its own state)."""
 
     def __init__(self, max_batch: int = 0):
+        self._sinks: List = []
         self.max_batch = max_batch
         self.lat = LatencyHistogram()
         self.batches: List[BatchStat] = []
@@ -152,6 +164,19 @@ class ServeMetrics:
             self.lanes[lane] = LaneStats()
         return self.lanes[lane]
 
+    def add_sink(self, sink) -> "ServeMetrics":
+        """Register a streaming consumer of recorded events. The sink
+        may implement any subset of ``record_done`` / ``record_shed`` /
+        ``record_batch`` (missing methods are skipped)."""
+        self._sinks.append(sink)
+        return self
+
+    def _fan_out(self, method: str, /, **kw) -> None:
+        for s in self._sinks:
+            fn = getattr(s, method, None)
+            if fn is not None:
+                fn(**kw)
+
     # -- recording ---------------------------------------------------------
     def record_enqueue(self, depth: int, now_us: float) -> None:
         with self._lock:
@@ -165,10 +190,14 @@ class ServeMetrics:
         with self._lock:
             self.rejected[reason] = self.rejected.get(reason, 0) + 1
 
-    def record_batch(self, rows: int, exec_us: float) -> None:
+    def record_batch(self, rows: int, exec_us: float,
+                     now_us: Optional[float] = None) -> None:
         occ = rows / self.max_batch if self.max_batch else 1.0
         with self._lock:
             self.batches.append(BatchStat(rows, occ, exec_us))
+        if self._sinks and now_us is not None:
+            self._fan_out("record_batch", rows=rows, exec_us=exec_us,
+                          now_us=now_us, occupancy=occ)
 
     def record_done(self, latency_us: float, now_us: float, lane: int = 0,
                     deadline_us: float = math.inf) -> None:
@@ -179,7 +208,9 @@ class ServeMetrics:
             ls = self._lane(lane)
             ls.completed += 1
             ls.lat.record(latency_us)
-            if math.isfinite(deadline_us):
+            has_deadline = math.isfinite(deadline_us)
+            ok = True
+            if has_deadline:
                 slack = deadline_us - now_us
                 ls.with_deadline += 1
                 ls.slack_sum_us += slack
@@ -187,13 +218,22 @@ class ServeMetrics:
                     ls.slack.record(slack)
                 else:
                     ls.missed += 1      # served, but past its deadline
+                    ok = False
+        if self._sinks:
+            self._fan_out("record_done", lane=lane, latency_us=latency_us,
+                          now_us=now_us, ok=ok,
+                          deadline_us=(deadline_us if has_deadline
+                                       else None))
 
-    def record_shed(self, lane: int = 0) -> None:
+    def record_shed(self, lane: int = 0,
+                    now_us: Optional[float] = None) -> None:
         """An expired request rejected before dispatch (SLO shed)."""
         with self._lock:
             self._lane(lane).shed += 1
             self.rejected["deadline_exceeded"] = (
                 self.rejected.get("deadline_exceeded", 0) + 1)
+        if self._sinks and now_us is not None:
+            self._fan_out("record_shed", lane=lane, now_us=now_us)
 
     def record_error(self, n_requests: int = 1) -> None:
         with self._lock:

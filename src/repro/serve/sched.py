@@ -64,6 +64,7 @@ class RejectReason:
     BAD_PRIORITY = "bad_priority"
     BAD_SHAPE = "bad_shape"
     DEADLINE_EXCEEDED = "deadline_exceeded"
+    DEGRADED = "degraded"       # burn-rate degradation shed (loosest lane)
 
 
 class RequestRejected(RuntimeError):
@@ -300,15 +301,36 @@ class MicroBatchScheduler:
         "_stopping": "_cond",
         "_shutdown": "_cond",
         "_n_features": "_cond",
+        "_monitor_next_us": "_cond",
     }
+    # helpers that require _cond already held by the caller
+    _LOCKED_METHODS = ("_degraded_check",)
 
     def __init__(self, executor: Callable[[np.ndarray], Sequence],
                  cfg: Optional[SchedConfig] = None, clock=None,
-                 metrics: Optional[ServeMetrics] = None, tracer=None):
+                 metrics: Optional[ServeMetrics] = None, tracer=None,
+                 slo_monitor=None):
         self.executor = executor
         self.cfg = cfg or SchedConfig()
         self.clock = clock or SystemClock()
         self.metrics = metrics or ServeMetrics(max_batch=self.cfg.max_batch)
+        # optional degradation hook (repro.obs.slo.BurnRateMonitor): the
+        # monitor is fed as a metrics sink; admission evaluates its
+        # multi-window rule (rate-limited) and, while any lane's alert
+        # is active, sheds the *loosest* lane with a typed
+        # RequestRejected(DEGRADED) — breaking the cheapest latency
+        # promise to free capacity for the lanes burning budget.
+        # Monitor alert callbacks run on the admitting thread, possibly
+        # under self._cond: they must never call back into this
+        # scheduler.
+        self.slo_monitor = slo_monitor
+        self._degrade_lane = self._loosest_lane()
+        self._monitor_next_us = -math.inf
+        self._monitor_interval_us = (
+            max(slo_monitor.short_window_us / 8.0, 100.0)
+            if slo_monitor is not None else 0.0)
+        if slo_monitor is not None:
+            self.metrics.add_sink(slo_monitor)
         # tracer and scheduler should share a clock so span timestamps
         # line up with enqueue stamps; callers constructing a
         # SpanTracer(clock=...) around the same clock get exact nesting
@@ -334,6 +356,27 @@ class MicroBatchScheduler:
             self._pass_deadline = False
 
     # -- admission ---------------------------------------------------------
+    def _loosest_lane(self) -> int:
+        """The degradation victim: the lane with the largest SLO budget
+        (deadline-free lanes count as infinitely loose; ties go to the
+        lower-priority index)."""
+        budgets = [(self.cfg.slo_for_lane(i), i)
+                   for i in range(self.cfg.n_priorities)]
+        return max(budgets)[1]
+
+    def _degraded_check(self, now_us: float, priority: int) -> bool:
+        """Evaluate the burn-rate monitor (rate-limited) and decide
+        whether this submit is shed by degradation. Caller holds
+        ``self._cond``."""
+        mon = self.slo_monitor
+        if mon is None:
+            return False
+        if now_us >= self._monitor_next_us:
+            self._monitor_next_us = now_us + self._monitor_interval_us
+            mon.check(now_us)
+        return priority == self._degrade_lane and bool(
+            mon.alerting_lanes())
+
     def _payload_width(self, x: np.ndarray) -> int:
         return 1 if x.ndim == 0 else int(x.shape[-1])
 
@@ -393,6 +436,13 @@ class MicroBatchScheduler:
             if self._shutdown:
                 self._note_reject(RejectReason.SHUTDOWN)
                 raise RequestRejected(RejectReason.SHUTDOWN)
+            if self._degraded_check(now, priority):
+                self._note_reject(RejectReason.DEGRADED)
+                raise RequestRejected(
+                    RejectReason.DEGRADED,
+                    f"lane {priority} shed while SLO burn rate is over "
+                    f"threshold on lane(s) "
+                    f"{self.slo_monitor.alerting_lanes()}")
             # width check + first-payload pinning share the lock, so two
             # concurrent first submits cannot both pass with different
             # widths and poison the same batch's concatenation
@@ -410,19 +460,16 @@ class MicroBatchScheduler:
             if self._n_features is None and x.ndim > 0:
                 self._n_features = width
             self.metrics.record_enqueue(len(self.queue), now)
-            if req.trace_id is not None:
-                # opened while still holding the lock: the flush thread
-                # can only pop this request (and record its span ends)
-                # after we release, so begin always precedes end in the
-                # ring buffer
-                dl = (None if not math.isfinite(req.deadline_us)
-                      else req.deadline_us)
-                tracer.abegin("request", req.trace_id, ts_us=now,
-                              args={"lane": priority, "rows": rows,
-                                    "deadline_us": dl})
-                tracer.abegin("queue_wait", req.trace_id, ts_us=now)
             self._cond.notify_all()
         return fut
+
+    def update_exec_estimate(self, us: float) -> None:
+        """Re-seed the batch-execution estimate with a fresher
+        calibration (``repro.obs.online.OnlineProfiler`` pushes the
+        blended live-device estimate here). Subsequent measured batches
+        keep blending into it through the normal EWMA."""
+        self._exec_ewma_us = float(us)
+        self._ewma_seeded = True
 
     # -- event engine ------------------------------------------------------
     def next_deadline_us(self) -> Optional[float]:
@@ -433,12 +480,27 @@ class MicroBatchScheduler:
             return self.queue.earliest_flush_us(self.cfg.max_wait_us,
                                                 self._exec_ewma_us)
 
+    def _trace_begin(self, tracer, r: "ServeRequest") -> None:
+        """Open the request's async spans retroactively at its enqueue
+        timestamp. Begins are recorded here on the scheduler-side paths
+        (dispatch / shed / drain) rather than in ``submit`` so the
+        client fast path — 64 threads contending inside ``_cond`` —
+        records nothing but an id; every span still carries the exact
+        enqueue time the submit path stamped on the request."""
+        dl = (None if not math.isfinite(r.deadline_us)
+              else r.deadline_us)
+        tracer.abegin_nested("request", "queue_wait", r.trace_id,
+                             r.t_enqueue_us,
+                             args={"lane": r.priority, "rows": r.rows,
+                                   "deadline_us": dl})
+
     def _shed(self, expired: List[ServeRequest], now_us: float) -> None:
         tracer = self.tracer
         for r in expired:
             r.future.t_done_us = now_us
-            self.metrics.record_shed(r.priority)
+            self.metrics.record_shed(r.priority, now_us=now_us)
             if r.trace_id is not None:
+                self._trace_begin(tracer, r)
                 tracer.aend("queue_wait", r.trace_id,
                             args={"flush_reason": "shed"})
                 tracer.aend("request", r.trace_id,
@@ -485,17 +547,23 @@ class MicroBatchScheduler:
         if tracer.enabled:
             for r in batch:
                 if r.trace_id is not None:
-                    # close the queue phase: the batch-formation end
-                    # carries the flush reason and the measured wait
-                    tracer.aend("queue_wait", r.trace_id, args={
-                        "flush_reason": reason,
-                        "wait_us": t_form - r.t_enqueue_us})
+                    # open both spans at the enqueue ts, close the
+                    # queue phase at exactly t_form; the flush reason
+                    # lives on the batch_form span
+                    self._trace_begin(tracer, r)
+                    tracer.aend("queue_wait", r.trace_id, ts_us=t_form)
         xs = [r.x if r.x.ndim > 1 else r.x[None] for r in batch]
-        with tracer.span("batch_form", cat="batch", args={
-                "flush_reason": reason, "rows": rows,
-                "n_requests": len(batch)}):
-            xcat = np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
         tightest = min(r.deadline_us for r in batch)
+        xcat = np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
+        if tracer.enabled:
+            # explicit endpoints so batch formation covers everything
+            # from t_form (queue_wait ends) through the concat — the
+            # per-request close loop and payload staging included;
+            # otherwise that work is an unattributed reconciliation gap
+            tracer.complete("batch_form", t_form, self.clock.now_us(),
+                            cat="batch",
+                            args={"flush_reason": reason, "rows": rows,
+                                  "n_requests": len(batch)})
         t0 = self.clock.now_us()
         try:
             with tracer.span("exec", cat="exec", args={"rows": rows}):
@@ -515,7 +583,7 @@ class MicroBatchScheduler:
                 r.future.set_exception(e)
             return
         now = self.clock.now_us()
-        self.metrics.record_batch(rows, now - t0)
+        self.metrics.record_batch(rows, now - t0, now_us=now)
         dt = now - t0
         self._n_execs += 1
         self._exec_ewma_us = (dt if self._n_execs == 1
@@ -624,6 +692,7 @@ class MicroBatchScheduler:
             r.future.t_done_us = now
             self.metrics.record_reject(RejectReason.SHUTDOWN)
             if r.trace_id is not None:
+                self._trace_begin(self.tracer, r)
                 self.tracer.aend("queue_wait", r.trace_id,
                                  args={"flush_reason": "drain"})
                 self.tracer.aend("request", r.trace_id,

@@ -56,7 +56,9 @@ def test_full_lifecycle_spans_size_flush():
         assert [e.name for e in begins] == ["request", "queue_wait"]
         assert [e.name for e in ends] == ["queue_wait", "request"]
         qw, req = ends
-        assert qw.args["flush_reason"] == "size"
+        # the dispatch-path queue_wait end carries no args (the flush
+        # reason lives on the batch_form span; wait is ts delta)
+        assert qw.args is None
         assert req.args["outcome"] == "ok"
         assert req.args["latency_us"] >= 0.0
 
@@ -75,9 +77,12 @@ def test_max_wait_flush_reason_and_wait_time():
     clk.advance_us(200.0)
     assert s.poll() == 1
     f.result(0)
-    (qw,) = _by(tracer.events(), ph="e", name="queue_wait")
-    assert qw.args["flush_reason"] == "max_wait"
-    assert qw.args["wait_us"] == 200.0
+    evs = tracer.events()
+    (qw,) = _by(evs, ph="e", name="queue_wait")
+    (qb,) = [e for e in _by(evs, ph="b", name="queue_wait")]
+    assert qw.ts_us - qb.ts_us == 200.0     # wait == end-begin ts delta
+    form = _by(evs, ph="X", name="batch_form")[0]
+    assert form.args["flush_reason"] == "max_wait"
 
 
 def test_shed_and_reject_terminal_events():
