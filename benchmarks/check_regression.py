@@ -178,6 +178,15 @@ _RATE_SUFFIXES = ("deadline_miss_rate", "slo_attainment")
 # percentage points (floor = 100 * min_rate), so a 0.3% -> 1.2%
 # tracer-overhead wobble is noise while 0.3% -> 40% still fails
 _PCT_SUFFIXES = ("overhead_pct", "overhead_pct_lb")
+# dimensionless cross-kernel ratios (``<kernel>_vs_<other>_x``): already
+# machine-normalized by construction, so they bypass both the µs noise
+# floor and the drift correction — these are the rows that keep a
+# kernel from silently regressing relative to its own oracle (the old
+# gate let aig_sim sit 210x over its jnp ref because both sides of the
+# diff carried the same slow number). Floored at ``min_ratio`` so
+# "fast, got slightly less fast" (0.04x -> 0.1x) is noise while
+# "comparable, got 10x slower" still fails.
+_RATIO_SUFFIX = "_x"
 
 
 def _is_rate(name: str) -> bool:
@@ -188,11 +197,15 @@ def _is_pct(name: str) -> bool:
     return name.endswith(_PCT_SUFFIXES)
 
 
+def _is_ratio(name: str) -> bool:
+    return name.endswith(_RATIO_SUFFIX)
+
+
 def compare(base: Dict[str, Tuple[float, str]],
             fresh: Dict[str, Tuple[float, str]],
             tolerance: float, min_us: float,
             normalize: bool = True, max_drift: float = 3.0,
-            min_rate: float = 0.05):
+            min_rate: float = 0.05, min_ratio: float = 0.5):
     """Returns (regressions, checked, only_one_side, drift).
 
     ``checked`` rows are (name, base, fresh, raw_ratio, residual,
@@ -205,7 +218,12 @@ def compare(base: Dict[str, Tuple[float, str]],
     at zero — a miss rate's *healthy* value is exactly 0.0, and the
     generic zero-skip would make a regression from a clean baseline
     (0.0 -> 0.4) invisible. The floor doubles as the noise tolerance:
-    0.0 -> 0.03 compares as 1x, 0.0 -> 0.4 as 8x."""
+    0.0 -> 0.03 compares as 1x, 0.0 -> 0.4 as 8x.
+
+    Dimensionless ``*_x`` ratios (kernel-vs-oracle) get the same
+    treatment with ``min_ratio``: floored, ungated by ``min_us``, and
+    never drift-corrected — both sides of a ratio ran on the same
+    machine, so any movement is the kernel's own."""
     effective: Dict[str, float] = {}
     rows = []
     for name in sorted(set(base) | set(fresh)):
@@ -219,6 +237,8 @@ def compare(base: Dict[str, Tuple[float, str]],
         elif _is_pct(name):
             cb = max(bv, 100.0 * min_rate)
             cf = max(fv, 100.0 * min_rate)
+        elif _is_ratio(name):
+            cb, cf = max(bv, min_ratio), max(fv, min_ratio)
         else:
             if direction == LOWER and max(bv, fv) < min_us:
                 continue                     # sub-floor: timer noise
@@ -234,7 +254,7 @@ def compare(base: Dict[str, Tuple[float, str]],
     # metrics only; rates are fractions of offered load and neither
     # inform nor receive the correction
     timing = [v for n, v in effective.items()
-              if not _is_rate(n) and not _is_pct(n)]
+              if not _is_rate(n) and not _is_pct(n) and not _is_ratio(n)]
     if normalize and len(timing) >= 3:       # too few metrics to estimate
         drift = median(timing)
         drift = min(max(drift, 1.0 / max_drift), max_drift)
@@ -246,7 +266,8 @@ def compare(base: Dict[str, Tuple[float, str]],
             continue
         bv, fv, ratio, direction = payload
         residual = effective[name] / (
-            1.0 if _is_rate(name) or _is_pct(name) else drift)
+            1.0 if _is_rate(name) or _is_pct(name) or _is_ratio(name)
+            else drift)
         row = (name, bv, fv, ratio, residual, direction)
         checked.append(row)
         if residual > 1.0 + tolerance:
@@ -269,6 +290,11 @@ def main(argv=None) -> int:
                          "attainment): values below it compare as "
                          "equal, so a clean 0.0 baseline still catches "
                          "a real regression without noise-failing")
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="floor for dimensionless *_x cross-kernel "
+                         "ratios: both sides below it compare as equal "
+                         "(already fast), above it the ratio is gated "
+                         "raw with no drift correction")
     ap.add_argument("--no-normalize", action="store_true",
                     help="compare raw ratios (no median machine-speed "
                          "drift correction)")
@@ -315,7 +341,7 @@ def main(argv=None) -> int:
             extract_metrics(base_doc), extract_metrics(fresh_doc),
             args.tolerance, args.min_us,
             normalize=not args.no_normalize, max_drift=args.max_drift,
-            min_rate=args.min_rate)
+            min_rate=args.min_rate, min_ratio=args.min_ratio)
         any_checked = any_checked or bool(checked)
         print(f"[regress] {name}: {len(checked)} metrics checked "
               f"(drift x{drift:.2f}), {len(only_one)} one-sided "

@@ -88,6 +88,19 @@ def run() -> Dict:
         lambda w: lut_eval(w, dp.leaf_idx, dp.tt_bits, dp.out_wires,
                            n_pis=dp.n_pis, n_wires=dp.n_wires),
         lwords, iters=3)
+    # streamed/tiled kernel: same netlist through the TilePlan route
+    # (HBM-resident wire plane, double-buffered per-tile plan tensors)
+    from repro.kernels.lut_eval import lut_eval_streamed
+    from repro.synth import compile_tile_plan
+    tp = compile_tile_plan(plan, dp.n_pis, dp.k)
+    out["lut_eval_streamed_us"] = _t(
+        lambda w: lut_eval_streamed(w, tp), lwords, iters=5)
+    # dimensionless cross-kernel ratios (direction-aware CI gates; the
+    # *_us rows drift with host load, the ratios should not)
+    out["lut_eval_streamed_vs_pallas_x"] = (
+        out["lut_eval_streamed_us"] / out["lut_eval_pallas_us"])
+    out["aig_sim_pallas_vs_ref_x"] = (
+        out["aig_sim_pallas_us"] / out["aig_sim_ref_us"])
     lbits = jnp.asarray(unpack_bits(lwords, 256 * 32), jnp.int32)
     tt01 = jnp.asarray((dp.tt_bits & 1).astype(np.int32))
     li, ow = jnp.asarray(dp.leaf_idx), jnp.asarray(dp.out_wires)

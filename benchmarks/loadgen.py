@@ -37,17 +37,22 @@ import numpy as np
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-BACKENDS = ("gather", "pallas", "bitplane", "bitplane-pallas")
+BACKENDS = ("gather", "pallas", "bitplane", "bitplane-pallas",
+            "bitplane-streamed")
 
 
 def parse_backend(spec: str, engine: str = "numpy"):
     """Backend spec -> (LogicEngine backend, bitplane engine).
 
-    ``"bitplane-pallas"`` pins the bitplane backend to the on-device
-    ``kernels.lut_eval`` executor regardless of ``--engine``; plain
-    ``"bitplane"`` uses ``engine`` (default numpy host fold)."""
-    if spec == "bitplane-pallas":
-        return "bitplane", "pallas"
+    ``"bitplane-<engine>"`` pins the bitplane backend to that executor
+    from the ``repro.synth.executors`` registry regardless of
+    ``--engine`` (``bitplane-streamed`` is shorthand for the
+    ``pallas-streamed`` engine); plain ``"bitplane"`` uses ``engine``
+    (default numpy host fold)."""
+    if spec == "bitplane-streamed":
+        return "bitplane", "pallas-streamed"
+    if spec.startswith("bitplane-"):
+        return "bitplane", spec[len("bitplane-"):]
     if spec == "bitplane":
         return "bitplane", engine
     return spec, "numpy"
@@ -389,7 +394,7 @@ def run(fast: bool = False, backends: Sequence[str] = BACKENDS,
         if registry is None:
             registry = MetricsRegistry()
         for b, (be, en) in resolved.items():
-            if be != "bitplane" or en != "pallas":
+            if be != "bitplane" or en not in ("pallas", "pallas-streamed"):
                 continue
             bn = engines[b].bitnet
             dplan = compile_device_plan(bn.mapped, bn._plan)
@@ -578,9 +583,12 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--engine", choices=["numpy", "pallas"], default="numpy",
-                    help="bitplane netlist executor (host fold or the "
-                         "kernels/lut_eval on-device pipeline)")
+    from repro.synth.executors import names as engine_names
+    ap.add_argument("--engine", choices=list(engine_names()),
+                    default="numpy",
+                    help="bitplane netlist executor from the "
+                         "repro.synth.executors registry (host fold, "
+                         "monolithic device kernel, or pallas-streamed)")
     ap.add_argument("--slo-us", default=None,
                     help="comma list of per-lane SLO deadline budgets in µs "
                          "(tight lane first, e.g. '5000,50000'; default: "

@@ -60,13 +60,31 @@ def plan_fingerprint(dplan: DevicePlan) -> str:
 
 def estimate_vmem_bytes(dplan: DevicePlan,
                         block_w: int = _DEFAULT_BLOCK_W) -> int:
-    """Working-set estimate for one lut_eval grid step: the (n_wires+1,
-    block_w) wire plane plus the full plan tensors (leaf indices / INIT
-    masks / output wires live on-chip for the whole slot walk)."""
+    """Working-set estimate for one *monolithic* lut_eval grid step:
+    the (n_wires+1, block_w) wire plane plus the full plan tensors
+    (leaf indices / INIT masks / output wires live on-chip for the
+    whole slot walk)."""
     plane = (dplan.n_wires + 1) * block_w * 4
     plan = (dplan.leaf_idx.size * 4 + dplan.tt_bits.size * 4
             + dplan.out_wires.size * 4)
     return plane + plan
+
+
+def estimate_tile_vmem_bytes(tplan, block_w: int = _DEFAULT_BLOCK_W) -> int:
+    """Working-set estimate for one *streamed* tile step. The wire
+    plane stays in HBM; on-chip the kernel holds the PI block, the
+    double-buffered plan tensors for two tiles, the staged leaf rows
+    (DMA-gather mode), the gathered-input/fold state of one tile, and
+    the output band — so the budget scales with (tile_rows, gather_cap,
+    block_w), never with netlist size."""
+    t, k, g = tplan.tile_rows, tplan.k, tplan.gather_cap
+    n_tt = 1 << k
+    pis = tplan.n_pis * block_w * 4
+    bufs = 2 * t * n_tt * 4 + 2 * t * k * 4        # double-buffered plans
+    stage = 2 * g * block_w * 4                    # staged leaf rows (dma)
+    fold = t * n_tt * block_w * 4 + t * k * block_w * 4   # state + gathers
+    band = t * block_w * 4                         # contiguous out band
+    return pis + bufs + stage + fold + band
 
 
 def validate_device_plan(dplan: DevicePlan,
@@ -76,9 +94,12 @@ def validate_device_plan(dplan: DevicePlan,
                          use_cache: bool = True,
                          name: str = "device-plan") -> CheckReport:
     """Static checks on a compiled ``DevicePlan``; cached by plan hash."""
+    tp = getattr(dplan, "tiles", None)
     key = None
     if use_cache:
-        key = (plan_fingerprint(dplan), vmem_budget_bytes, block_w)
+        tile_key = (tp.tile_rows, tp.gather_cap) if tp is not None else None
+        key = (plan_fingerprint(dplan), vmem_budget_bytes, block_w,
+               tile_key)
         hit = _CACHE.get(key)
         if hit is not None:
             return hit
@@ -242,17 +263,61 @@ def _validate(dplan: DevicePlan, vmem_budget_bytes: Optional[int],
                   f"out_idx[{i}] = {oi[i]} outside [0, {nw})",
                   where=f"output {i}")
 
+    # ---- tile schedule consistency (streamed kernel) ----
+    tp = getattr(dplan, "tiles", None)
+    if tp is not None:
+        rep.checked += 1
+        staged = tp.gather_rows[
+            np.arange(tp.n_tiles)[:, None, None], tp.leaf_loc]
+        if not np.array_equal(staged, tp.leaf_tiles):
+            t, s, j = (int(x[0]) for x in
+                       np.nonzero(staged != tp.leaf_tiles))
+            rep.error(PASS, "tile-gather",
+                      f"gather_rows[{t}][leaf_loc[{t},{s},{j}]] = "
+                      f"{staged[t, s, j]} != leaf_tiles[{t},{s},{j}] = "
+                      f"{tp.leaf_tiles[t, s, j]} — the staged-DMA remap "
+                      f"disagrees with the direct leaf rows",
+                      where=f"tile {t} slot {s}")
+        rep.checked += 1
+        bad = tp.leaf_tiles >= tp.out_base[:, None, None]
+        if bad.any():
+            t, s, j = (int(x[0]) for x in np.nonzero(bad))
+            rep.error(PASS, "tile-order",
+                      f"tile {t} (band starts at row {tp.out_base[t]}) "
+                      f"reads row {tp.leaf_tiles[t, s, j]} from its own "
+                      f"or a later band — streamed tile order would "
+                      f"read unwritten rows", where=f"tile {t} slot {s}")
+
     # ---- VMEM footprint ----
-    est = estimate_vmem_bytes(dplan, block_w)
-    rep.info["vmem_bytes"] = est
+    # With a tile schedule attached the streamed kernel keeps the wire
+    # plane in HBM, so the budget applies per tile step; otherwise the
+    # monolithic kernel needs the whole plane resident.
     rep.info["n_levels"] = n_levels
     rep.info["level_width"] = lw
     rep.checked += 1
-    if vmem_budget_bytes is not None and est > vmem_budget_bytes:
-        rep.error(PASS, "vmem-budget",
-                  f"estimated VMEM working set {est / 2**20:.1f} MiB "
-                  f"(wire plane {nw + 1} x {block_w} words + plan "
-                  f"tensors) exceeds the {vmem_budget_bytes / 2**20:.1f} "
-                  f"MiB budget — the netlist needs the streamed/tiled "
-                  f"kernel or a smaller block_w")
+    if tp is not None:
+        est = estimate_tile_vmem_bytes(tp, block_w)
+        rep.info["vmem_bytes"] = est
+        rep.info["tile_rows"] = tp.tile_rows
+        rep.info["n_tiles"] = tp.n_tiles
+        if vmem_budget_bytes is not None and est > vmem_budget_bytes:
+            rep.error(PASS, "vmem-budget",
+                      f"estimated per-tile VMEM working set "
+                      f"{est / 2**20:.1f} MiB (tile_rows "
+                      f"{tp.tile_rows} x {block_w} words, gather_cap "
+                      f"{tp.gather_cap}) exceeds the "
+                      f"{vmem_budget_bytes / 2**20:.1f} MiB budget — "
+                      f"shrink tile_rows or block_w")
+    else:
+        est = estimate_vmem_bytes(dplan, block_w)
+        rep.info["vmem_bytes"] = est
+        if vmem_budget_bytes is not None and est > vmem_budget_bytes:
+            rep.error(PASS, "vmem-budget",
+                      f"estimated VMEM working set {est / 2**20:.1f} MiB "
+                      f"(wire plane {nw + 1} x {block_w} words + plan "
+                      f"tensors) exceeds the "
+                      f"{vmem_budget_bytes / 2**20:.1f} MiB budget — use "
+                      f"the streamed engine (engine=\"pallas-streamed\" "
+                      f"/ compile_device_plan(tile_rows=...)) or a "
+                      f"smaller block_w")
     return rep

@@ -2,17 +2,22 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..spec import DEFAULT_SPEC, KernelSpec
 from .fanin_matmul import DEFAULT_BB, DEFAULT_BN, fanin_matmul_pallas
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "spec"))
 def fanin_matmul(x: jax.Array, idx: jax.Array, w: jax.Array,
-                 bias: jax.Array, interpret: bool = True) -> jax.Array:
+                 bias: jax.Array, interpret: Optional[bool] = None,
+                 spec: Optional[KernelSpec] = None) -> jax.Array:
     """FCP-sparse linear: x (B, n_in), idx/w (N, K), bias (N,) -> (B, N)."""
+    interpret = (DEFAULT_SPEC if spec is None
+                 else spec).resolve_interpret(interpret)
     B, n_in = x.shape
     N, K = idx.shape
 

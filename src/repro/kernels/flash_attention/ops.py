@@ -2,22 +2,27 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..spec import DEFAULT_SPEC, KernelSpec
 from .flash_attention import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+@partial(jax.jit, static_argnames=("causal", "window", "interpret", "spec"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, window: int = 0,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None,
+                    spec: Optional[KernelSpec] = None) -> jax.Array:
     """q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh) with H % KV == 0.
 
     GQA handled by repeating KV head indices into the flattened (B*H)
     leading dim (no materialised repeat: gather of head slices).
     """
+    interpret = (DEFAULT_SPEC if spec is None
+                 else spec).resolve_interpret(interpret)
     b, sq, h, dh = q.shape
     sk, kv = k.shape[1], k.shape[2]
     rep = h // kv

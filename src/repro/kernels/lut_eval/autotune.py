@@ -1,0 +1,155 @@
+"""Persisted tile-size autotuning for the streamed lut_eval kernel.
+
+The streamed kernel has two geometry knobs — ``tile_rows`` (LUT slots
+folded per step; sets plan-DMA granularity and fold batch) and
+``block_w`` (packed-word tile per grid step). The best point depends on
+the netlist shape (level widths, fanin mix), so the sweep is run once
+per netlist and the winner persisted, keyed by the plan's existing sha1
+fingerprint (``repro.check.plan_check.plan_fingerprint``) plus the jax
+backend and interpret flag — a retuned TPU never poisons the CPU cache
+and vice versa.
+
+The cache file defaults to ``~/.cache/repro/lut_eval_tiles.json``
+(override with ``REPRO_AUTOTUNE_CACHE``; set it to an empty string to
+disable persistence). ``_StreamedExecutor`` consults ``cached_tile`` on
+construction, so serving picks up a tuned shape for free; the sweep
+itself (``autotune_streamed``) only runs when explicitly invoked —
+``benchmarks/kernels_bench.py --autotune`` or a direct call — because
+it measures every candidate end to end.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+# (tile_rows, block_w) sweep grid: tile_rows trades plan-DMA count
+# against fold width; block_w trades grid steps against VMEM per step.
+DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (16, 128), (32, 128), (64, 128), (128, 128),
+    (32, 256), (64, 256),
+)
+
+_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def cache_path() -> Optional[str]:
+    """Cache file path, or ``None`` when persistence is disabled."""
+    p = os.environ.get(_ENV)
+    if p is not None:
+        return p or None
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "lut_eval_tiles.json")
+
+
+def _load(path: str) -> Dict[str, dict]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def _store(path: str, data: Dict[str, dict]) -> None:
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                       # cache is advisory, never fatal
+
+
+def _key(fingerprint: str, backend: str, interpret: bool) -> str:
+    return f"{fingerprint}:{backend}:{'interp' if interpret else 'mosaic'}"
+
+
+def lookup(fingerprint: str, backend: str,
+           interpret: bool) -> Optional[Tuple[int, int]]:
+    """Persisted (tile_rows, block_w) for a plan fingerprint, if any."""
+    path = cache_path()
+    if path is None:
+        return None
+    ent = _load(path).get(_key(fingerprint, backend, interpret))
+    if not ent:
+        return None
+    try:
+        return int(ent["tile_rows"]), int(ent["block_w"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def record(fingerprint: str, backend: str, interpret: bool,
+           tile_rows: int, block_w: int, us: float) -> None:
+    """Persist a tuned shape (last write wins)."""
+    path = cache_path()
+    if path is None:
+        return
+    data = _load(path)
+    data[_key(fingerprint, backend, interpret)] = {
+        "tile_rows": int(tile_rows), "block_w": int(block_w),
+        "us": float(us), "stamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    _store(path, data)
+
+
+def cached_tile(dplan, interpret: bool) -> Optional[Tuple[int, int]]:
+    """Tuned (tile_rows, block_w) for a ``DevicePlan``, if persisted."""
+    import jax
+    from repro.check.plan_check import plan_fingerprint   # lazy: cycle
+    return lookup(plan_fingerprint(dplan), jax.default_backend(),
+                  interpret)
+
+
+def _time_us(fn, iters: int = 5) -> float:
+    import jax
+    jax.block_until_ready(fn())          # compile / first trace
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def autotune_streamed(bitnet, pi_words,
+                      candidates: Sequence[Tuple[int, int]]
+                      = DEFAULT_CANDIDATES,
+                      iters: int = 5, interpret: Optional[bool] = None,
+                      persist: bool = True) -> Tuple[int, int, float]:
+    """Sweep (tile_rows, block_w) over a real batch and persist the
+    winner; returns (tile_rows, block_w, us).
+
+    ``bitnet``: a ``BitplaneNetwork``; ``pi_words``: (n_pi_wires, W)
+    uint32 packed bitplanes shaped like the serving batch (the tuned
+    shape is only as good as the batch it was measured on).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.check.plan_check import plan_fingerprint   # lazy: cycle
+    from repro.kernels.spec import DEFAULT_SPEC
+    from repro.synth.executor import _StreamedExecutor, compile_device_plan
+
+    words = jnp.asarray(
+        np.ascontiguousarray(pi_words, np.uint32).view(np.int32))
+    best: Optional[Tuple[int, int, float]] = None
+    for tile_rows, block_w in candidates:
+        ex = _StreamedExecutor(
+            bitnet, interpret=interpret,
+            spec=DEFAULT_SPEC.with_tile(tile_rows=tile_rows,
+                                        block_w=block_w))
+        run = jax.jit(ex._eval_words)
+        us = _time_us(lambda: run(words), iters=iters)
+        if best is None or us < best[2]:
+            best = (tile_rows, block_w, us)
+    assert best is not None
+    if persist:
+        dp = compile_device_plan(bitnet.mapped, bitnet._plan)
+        record(plan_fingerprint(dp), jax.default_backend(),
+               DEFAULT_SPEC.resolve_interpret(interpret),
+               best[0], best[1], best[2])
+    return best

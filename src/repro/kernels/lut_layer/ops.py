@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..spec import DEFAULT_SPEC, KernelSpec
 from .lut_layer import DEFAULT_BB, DEFAULT_BN, lut_layer_pallas
 
 
@@ -19,10 +21,13 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
-@partial(jax.jit, static_argnames=("n_levels", "interpret"))
+@partial(jax.jit, static_argnames=("n_levels", "interpret", "spec"))
 def lut_layer(codes: jax.Array, idx: jax.Array, tables: jax.Array,
-              n_levels: int, interpret: bool = True) -> jax.Array:
+              n_levels: int, interpret: Optional[bool] = None,
+              spec: Optional[KernelSpec] = None) -> jax.Array:
     """Truth-table layer: (B, N_in) codes -> (B, N) output codes."""
+    interpret = (DEFAULT_SPEC if spec is None
+                 else spec).resolve_interpret(interpret)
     B, _ = codes.shape
     N, K = idx.shape
     bb = min(DEFAULT_BB, max(8, B))

@@ -2,23 +2,28 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..spec import DEFAULT_SPEC, KernelSpec
 from .ref import pack_bipolar
 from .xnor_popcount import (DEFAULT_BB, DEFAULT_BN, DEFAULT_BW,
                             xnor_matmul_pallas)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def xnor_matmul(x: jax.Array, w: jax.Array, interpret: bool = True
-                ) -> jax.Array:
+@partial(jax.jit, static_argnames=("interpret", "spec"))
+def xnor_matmul(x: jax.Array, w: jax.Array,
+                interpret: Optional[bool] = None,
+                spec: Optional[KernelSpec] = None) -> jax.Array:
     """Bipolar (±1) matmul: x (B, n) @ w (N, n)^T -> (B, N) int32.
 
     Packs both operands, pads every axis to kernel block multiples, and
     un-pads the result.
     """
+    interpret = (DEFAULT_SPEC if spec is None
+                 else spec).resolve_interpret(interpret)
     B, n = x.shape
     N = w.shape[0]
     xp = pack_bipolar(x)

@@ -226,10 +226,13 @@ def main(argv=None):
     ap.add_argument("--backend", choices=["gather", "pallas", "bitplane"],
                     default="gather",
                     help="logic inference path (bitplane = mapped netlist)")
-    ap.add_argument("--engine", choices=["numpy", "pallas"],
+    from repro.synth.executors import names as engine_names
+    ap.add_argument("--engine", choices=list(engine_names()),
                     default="numpy",
-                    help="bitplane netlist executor: host fold or the "
-                         "kernels/lut_eval on-device pipeline")
+                    help="bitplane netlist executor from the "
+                         "repro.synth.executors registry (host fold, "
+                         "monolithic kernels/lut_eval, or the streamed/"
+                         "tiled pallas-streamed pipeline)")
     ap.add_argument("--sched", action="store_true",
                     help="serve through the repro.serve micro-batch "
                          "scheduler instead of the blocking loop")

@@ -15,6 +15,10 @@ actually costs on the device. This module measures it two ways:
     running level prefixes 1..n and differencing: level i's row is the
     *incremental* device cost of adding it, which captures gather
     locality the synthetic grid cannot.
+  * ``profile_tile_plan`` — the streamed kernel's walk over a
+    ``TilePlan``, timed by tile prefixes the same way: each row is one
+    tile's incremental cost, which is the granularity the streamed
+    engine actually schedules (and what tile-size autotuning trades).
 
 ``build_latency_table`` fits both into a ``LatencyTable`` whose
 ``estimate_level_us``/``estimate_plan_us`` interpolate (linear in
@@ -183,6 +187,75 @@ def profile_plan(dplan, w_words: int = 128, iters: int = 3,
     return rows
 
 
+def tile_plan_fanins(tplan) -> List[float]:
+    """Mean live (non-const-leaf) fanin per tile of a ``TilePlan``;
+    pad slots (all-zero INIT) are excluded, pure-pad tiles report 0."""
+    out = []
+    for t in range(tplan.n_tiles):
+        live = tplan.tt_tiles[t].any(axis=1)
+        if not live.any():
+            out.append(0.0)
+            continue
+        fan = (tplan.leaf_tiles[t][live] != 0).sum(axis=1)
+        out.append(float(fan.mean()))
+    return out
+
+
+def profile_tile_plan(tplan, w_words: int = 128, iters: int = 3,
+                      interpret: Optional[bool] = None,
+                      gather: Optional[str] = None,
+                      seed: int = 0) -> List[Dict]:
+    """Measured incremental device µs per *tile* of a streamed plan.
+
+    Times the streamed kernel on tile prefixes 1..n_tiles and
+    differences consecutive timings (clamped >= 0), so each row is what
+    one double-buffered tile step costs end to end — DMA overlap
+    included, which per-level timing through the monolithic kernel
+    cannot see.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.lut_eval.lut_eval import (default_gather,
+                                                 lut_eval_streamed_pallas)
+    from repro.kernels.spec import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    if gather is None:
+        gather = default_gather()
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 1 << 31, (max(tplan.n_pis, 1), w_words),
+                         dtype=np.int64)
+    jwords = jnp.asarray(words.astype(np.int32))
+    tt = jnp.asarray(np.ascontiguousarray(tplan.tt_tiles).view(np.int32))
+    leaf = jnp.asarray(tplan.leaf_tiles)
+    loc = jnp.asarray(tplan.leaf_loc)
+    grows = jnp.asarray(tplan.gather_rows)
+    ob = jnp.asarray(tplan.out_base)
+    fanins = tile_plan_fanins(tplan)
+
+    prefix_us = []
+    for n in range(1, tplan.n_tiles + 1):
+        def fn(w, n=n):
+            return lut_eval_streamed_pallas(
+                w, tt[:n], leaf[:n], loc[:n], grows[:n], ob[:n],
+                n_pis=tplan.n_pis, n_tiles=n, tile_rows=tplan.tile_rows,
+                gather_cap=tplan.gather_cap, n_rows=tplan.n_rows,
+                k=tplan.k, block_w=min(128, w_words), gather=gather,
+                interpret=interpret)
+
+        prefix_us.append(_time_us(fn, jwords, iters=iters))
+    rows = []
+    for t, us in enumerate(prefix_us):
+        inc = us - (prefix_us[t - 1] if t else 0.0)
+        rows.append({"source": "tile", "level": int(tplan.level_of_tile[t]),
+                     "tile": t, "level_width": int(tplan.tile_rows),
+                     "k": int(tplan.k), "fanin": round(fanins[t], 2),
+                     "device_us": float(max(inc, 0.0)),
+                     "prefix_us": float(us), "w_words": int(w_words)})
+    return rows
+
+
 @dataclasses.dataclass
 class LatencyTable:
     """Measured ``(level_width, k, fanin) -> device µs`` lookup.
@@ -311,6 +384,10 @@ def build_latency_table(dplan=None, widths: Sequence[int] = DEFAULT_WIDTHS,
     if dplan is not None:
         rows += profile_plan(dplan, w_words=w_words, iters=iters,
                              interpret=interpret, seed=seed)
+        if getattr(dplan, "tiles", None) is not None:
+            rows += profile_tile_plan(dplan.tiles, w_words=w_words,
+                                      iters=iters, interpret=interpret,
+                                      seed=seed)
     meta = {"backend": jax.default_backend(), "interpret": bool(interpret),
             "device": str(jax.devices()[0]), "w_words": int(w_words),
             "iters": int(iters), "k": int(k)}

@@ -11,11 +11,14 @@ into a request-throughput mechanism. Per-request argmaxes are sliced
 back out of the output planes, bit-identical to ``classify`` on the
 gather and Pallas paths.
 
-With ``BitplaneNetwork(engine="pallas")`` the packed words are handed
-straight to the device (``kernels.lut_eval``) and only the scattered
-argmax labels come back — pack → all levels → complement → argmax is
-one fused jit, so between enqueue and verdict nothing touches the host.
-The numpy engine keeps the host fold (``execute_packed``) + decode.
+The netlist executor is whatever engine the ``BitplaneNetwork`` was
+built with (``repro.synth.executors`` registry): under the device
+engines (``"pallas"``, ``"pallas-streamed"``) the packed words are
+handed straight to the kernel and only the scattered argmax labels come
+back — pack → all levels → complement → argmax is one fused jit, so
+between enqueue and verdict nothing touches the host. The numpy engine
+keeps the host fold (``execute_packed``) + decode. Aggregation itself
+is engine-agnostic; ``classify_packed`` dispatches.
 """
 from __future__ import annotations
 

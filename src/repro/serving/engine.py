@@ -39,10 +39,13 @@ class LogicEngine:
         packed bitplane ops (32 samples per uint32 lane) — no per-neuron
         gathers at all. Argmax outputs are identical across backends.
 
-    For the bitplane backend, ``engine`` picks the netlist executor:
-    ``"numpy"`` folds levels on the host; ``"pallas"`` runs the whole
-    levelized netlist through the ``kernels.lut_eval`` device pipeline
-    (pack → levels → complement → argmax in one jit).
+    For the bitplane backend, ``engine`` names a netlist executor in
+    the ``repro.synth.executors`` registry: ``"numpy"`` folds levels on
+    the host; ``"pallas"`` runs the whole levelized netlist through the
+    monolithic ``kernels.lut_eval`` device pipeline;
+    ``"pallas-streamed"`` through the streamed/tiled kernel (pack →
+    levels → complement → argmax in one jit either way). Custom engines
+    registered via ``executors.register`` work here unchanged.
     """
 
     net: LogicNetwork

@@ -15,8 +15,11 @@ The offline replacement for the Vivado step of NullaNet Tiny's flow:
 """
 from .aig import AIG, CONST0, CONST1, lit, lit_compl, lit_not, lit_var
 from .cuts import Cut, enumerate_cuts
-from .executor import (BitplaneNetwork, DevicePlan, compile_device_plan,
-                       emit_verilog, execute_packed, execute_packed_pallas)
+from . import executors
+from .executor import (BitplaneNetwork, DevicePlan, TilePlan,
+                       compile_device_plan, compile_tile_plan,
+                       emit_verilog, execute_packed, execute_packed_pallas,
+                       execute_packed_streamed)
 from .from_sop import cover_to_aig, layer_to_aig, network_to_aig, table_to_aig
 from .lutmap import MappedLUT, MappedNetwork, map_aig
 from .rewrite import balance, optimize, rewrite
@@ -49,8 +52,11 @@ def compile_logic_network(net, effort: int = 1, k: int = 6,
                           verify: bool = False) -> BitplaneNetwork:
     """LogicNetwork -> optimized mapped netlist, ready to execute.
 
-    ``engine="pallas"`` runs the netlist through the fused
-    ``kernels.lut_eval`` device pipeline instead of the host fold.
+    ``engine`` names an executor in the ``repro.synth.executors``
+    registry: ``"pallas"`` runs the netlist through the fused
+    ``kernels.lut_eval`` device pipeline instead of the host fold, and
+    ``"pallas-streamed"`` through the streamed/tiled kernel (fastest,
+    and the only engine whose wire plane may exceed VMEM).
     ``verify=True`` additionally runs the ``repro.check`` lint +
     equivalence passes over every synthesis stage (CheckFailure on the
     first counterexample)."""

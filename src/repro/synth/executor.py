@@ -8,18 +8,28 @@ over its six input planes (6 select steps, each one AND/ANDN/OR over the
 whole level). Per 32 samples, a LUT costs ~18 word ops regardless of
 batch size — the TPU/CPU analogue of the FPGA's spatial LUT fabric.
 
-Two execution engines share the mapped netlist:
+Execution engines are pluggable: ``BitplaneNetwork(engine=...)`` looks
+the name up in the ``repro.synth.executors`` registry (unknown names
+raise ``UnknownEngineError`` listing what is registered; third-party
+engines join via ``executors.register``). Built-ins:
 
-  * ``engine="numpy"``  — the host fold below (``execute_packed``),
-    level-by-level vectorized bitwise ops;
-  * ``engine="pallas"`` — ``compile_device_plan`` stacks the levelized
-    netlist into device-resident plan tensors (leaf indices, INIT
-    masks, output wires — constant-wire-padded to a uniform level
-    width) and the ``repro.kernels.lut_eval`` kernel evaluates every
-    level on-device with the wire plane resident in VMEM; bitplane
-    pack, all levels, the output complement and the per-request argmax
-    fuse into one jit, so nothing touches the host between enqueue and
-    verdict.
+  * ``engine="numpy"``          — the host fold below
+    (``execute_packed``), level-by-level vectorized bitwise ops;
+  * ``engine="pallas"``         — ``compile_device_plan`` stacks the
+    levelized netlist into device-resident plan tensors and the
+    monolithic ``repro.kernels.lut_eval`` kernel evaluates every level
+    with the whole wire plane resident in VMEM;
+  * ``engine="pallas-streamed"`` — ``compile_tile_plan`` renumbers the
+    wire plane level-major and tiles the slot walk; the streamed kernel
+    keeps the plane in HBM, double-buffers the per-tile plan tensors
+    HBM→VMEM, and folds a whole tile of LUTs per step — faster than
+    both of the above and the only engine whose netlists may exceed
+    VMEM.
+
+All engines are bit-identical on every reachable input; the device
+engines fuse bitplane pack, all levels, the output complement and the
+per-request argmax into one jit, so nothing touches the host between
+enqueue and verdict.
 
 ``emit_verilog`` prints the same netlist structurally (one INIT-indexed
 assign per LUT), i.e. the post-mapping artifact the paper gets out of
@@ -36,13 +46,17 @@ from .aig import lit_compl, lit_var, tt_expand
 from .lutmap import MappedNetwork
 from .simulate import WORD_BITS, pack_bits, unpack_bits
 
-ENGINES = ("numpy", "pallas")
+# Back-compat alias: the authoritative list is the executors registry
+# (``repro.synth.executors.names()``), which third parties can extend.
+ENGINES = ("numpy", "pallas", "pallas-streamed")
 
 # wire numbering for execution/emission:
 #   wire 0            = constant 0
 #   wires 1..n_pis    = primary inputs
 #   wires n_pis+1+i   = output of LUT i
 _CONST_WIRE = 0
+
+_DEFAULT_TILE_ROWS = 32     # mirrors repro.kernels.spec without importing it
 
 
 @dataclasses.dataclass
@@ -125,6 +139,118 @@ def execute_packed(mapped: MappedNetwork, pi_words: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Tile plan: level-major renumbering + slot tiling for the streamed kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TilePlan:
+    """The mapped netlist as a streamed tile schedule.
+
+    Wires are renumbered *level-major*: row 0 stays the constant-0
+    plane, rows 1..n_pis the primary inputs, then each LUT level
+    occupies one contiguous band of rows, padded up to a multiple of
+    ``tile_rows`` so every tile writes exactly one contiguous band of
+    ``tile_rows`` rows (``out_base[t]`` is its first row). Pad slots
+    read the constant row with all-zero INIT masks and therefore write
+    0 to their own (never-read) pad row — no per-slot validity branch
+    and no dump row.
+
+    ``leaf_tiles`` holds plane-row leaf indices for the interpreter's
+    vector-gather path; ``gather_rows``/``leaf_loc`` are the staged-DMA
+    remap for the TPU path: ``gather_rows[t]`` lists the tile's unique
+    leaf rows (padded by re-reading row 0) and
+    ``leaf_loc[t, s, j]`` is slot ``s``'s position of leaf ``j`` inside
+    that staged buffer. ``row_of_wire`` maps the original executor wire
+    numbering (const/PIs/LUT outputs) to renumbered plane rows, so
+    callers can pull any original wire out of the streamed plane.
+    """
+
+    tt_tiles: np.ndarray     # (n_tiles, T, 2^k) uint32 INIT masks
+    leaf_tiles: np.ndarray   # (n_tiles, T, k) int32 plane-row leaves
+    leaf_loc: np.ndarray     # (n_tiles, T, k) int32 staged-buffer index
+    gather_rows: np.ndarray  # (n_tiles, G) int32 unique rows staged/tile
+    out_base: np.ndarray     # (n_tiles,) int32 first row of tile's band
+    level_of_tile: np.ndarray  # (n_tiles,) int32 source netlist level
+    out_idx: np.ndarray      # (n_outputs,) int32 renumbered output rows
+    out_neg: np.ndarray      # (n_outputs,) bool complement flags
+    row_of_wire: np.ndarray  # (n_wires,) int32 original wire -> plane row
+    n_pis: int
+    n_rows: int              # renumbered plane height (incl. pad rows)
+    tile_rows: int           # T — LUT slots folded per kernel step
+    gather_cap: int          # G — staged leaf rows per tile (DMA mode)
+    k: int
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tt_tiles.shape[0]
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.level_of_tile.max()) + 1 if self.n_tiles else 0
+
+    def tiles_of_level(self, level: int) -> np.ndarray:
+        """Tile indices belonging to one netlist level, in walk order."""
+        return np.nonzero(self.level_of_tile == level)[0]
+
+
+def compile_tile_plan(plan: _Plan, n_pis: int, k: int,
+                      tile_rows: int = _DEFAULT_TILE_ROWS) -> TilePlan:
+    """Tile the levelized plan for ``lut_eval_streamed_pallas``.
+
+    Each level's slots are cut into tiles of ``tile_rows``; the level's
+    output band is padded to a whole number of tiles so band stores
+    stay contiguous. Levelization makes tile order a topological order,
+    which is what lets the kernel stream tiles back-to-back with only
+    plan-tensor DMAs in flight.
+    """
+    T = max(1, int(tile_rows))
+    n_luts = sum(la.out_wires.shape[0] for la in plan.levels)
+    n_wires = 1 + n_pis + n_luts
+    row_of_wire = np.zeros((n_wires,), np.int32)
+    row_of_wire[: n_pis + 1] = np.arange(n_pis + 1, dtype=np.int32)
+    base = 1 + n_pis
+    bands = []                       # (first_row, n_real_slots, n_tiles)
+    for la in plan.levels:
+        n_real = la.out_wires.shape[0]
+        nt = -(-n_real // T)
+        row_of_wire[la.out_wires] = base + np.arange(n_real,
+                                                     dtype=np.int32)
+        bands.append((base, n_real, nt))
+        base += nt * T
+    n_rows = base
+    n_tiles = sum(b[2] for b in bands)
+    tt_tiles = np.zeros((n_tiles, T, 1 << k), np.uint32)
+    leaf_tiles = np.zeros((n_tiles, T, k), np.int32)
+    leaf_loc = np.zeros((n_tiles, T, k), np.int32)
+    out_base = np.zeros((n_tiles,), np.int32)
+    level_of_tile = np.zeros((n_tiles,), np.int32)
+    uniq: List[np.ndarray] = []
+    ti = 0
+    for lvl, ((b, n_real, nt), la) in enumerate(zip(bands, plan.levels)):
+        for t in range(nt):
+            lo, hi = t * T, min((t + 1) * T, n_real)
+            n = hi - lo
+            tt_tiles[ti, :n] = la.tt_bits[lo:hi]
+            leaf_tiles[ti, :n] = row_of_wire[la.leaf_idx[lo:hi]]
+            # pad slots keep row-0 leaves + zero INIT (write 0)
+            rows, inv = np.unique(leaf_tiles[ti].reshape(-1),
+                                  return_inverse=True)
+            leaf_loc[ti] = inv.reshape(T, k).astype(np.int32)
+            uniq.append(rows.astype(np.int32))
+            out_base[ti] = b + lo
+            level_of_tile[ti] = lvl
+            ti += 1
+    gather_cap = max((r.shape[0] for r in uniq), default=1)
+    gather_rows = np.zeros((n_tiles, gather_cap), np.int32)
+    for ti, rows in enumerate(uniq):
+        gather_rows[ti, :rows.shape[0]] = rows   # pad: re-stage row 0
+    out_idx = row_of_wire[plan.out_idx].astype(np.int32)
+    return TilePlan(tt_tiles, leaf_tiles, leaf_loc, gather_rows, out_base,
+                    level_of_tile, out_idx, plan.out_neg.copy(),
+                    row_of_wire, n_pis, n_rows, T, gather_cap, k)
+
+
+# ---------------------------------------------------------------------------
 # Device plan: level-stacked, width-padded tensors for the lut_eval kernel
 # ---------------------------------------------------------------------------
 
@@ -137,6 +263,11 @@ class DevicePlan:
     wire (all leaves 0, INIT masks 0) and writes the dump row
     ``n_wires`` — one past the last real wire — so the kernel's slot
     walk needs no per-slot validity branch.
+
+    ``tiles`` (attached by ``compile_device_plan(..., tile_rows=...)``)
+    is the same netlist as a streamed tile schedule (``TilePlan``) for
+    the tiled kernel; it is derived data and deliberately excluded from
+    ``repro.check.plan_check.plan_fingerprint``.
     """
 
     leaf_idx: np.ndarray     # (n_levels, Lw, k) int32 wire indices
@@ -147,6 +278,7 @@ class DevicePlan:
     n_pis: int
     n_wires: int             # 1 + n_pis + n_luts (dump row index)
     k: int
+    tiles: Optional[TilePlan] = None
 
     @property
     def n_levels(self) -> int:
@@ -159,13 +291,16 @@ class DevicePlan:
 
 def compile_device_plan(mapped: MappedNetwork,
                         plan: Optional[_Plan] = None,
-                        verify: bool = False) -> DevicePlan:
+                        verify: bool = False,
+                        tile_rows: Optional[int] = None) -> DevicePlan:
     """Stack the per-level arrays of ``_compile_plan`` into uniform-width
     tensors ready to ship to the device.
 
-    ``verify=True`` runs ``repro.check``'s plan validator plus a
-    mapped<->plan miter on the result and raises ``CheckFailure`` with
-    the first counterexample on any disagreement."""
+    ``tile_rows`` additionally attaches the streamed tile schedule
+    (``DevicePlan.tiles``) with that slot-tile size. ``verify=True``
+    runs ``repro.check``'s plan validator plus a mapped<->plan miter on
+    the result and raises ``CheckFailure`` with the first counterexample
+    on any disagreement."""
     if plan is None:
         plan = _compile_plan(mapped)
     k = mapped.k
@@ -183,6 +318,8 @@ def compile_device_plan(mapped: MappedNetwork,
     dplan = DevicePlan(leaf_idx, tt_bits, out_wires,
                        plan.out_idx.copy(), plan.out_neg.copy(),
                        mapped.n_pis, n_wires, k)
+    if tile_rows is not None:
+        dplan.tiles = compile_tile_plan(plan, mapped.n_pis, k, tile_rows)
     if verify:
         from repro.check.pipeline import verify_plan
         verify_plan(mapped, dplan)
@@ -208,37 +345,99 @@ def execute_packed_pallas(mapped: MappedNetwork, pi_words: np.ndarray,
     return out
 
 
-class _PallasExecutor:
-    """The fused on-device pipeline over a ``DevicePlan``.
+def execute_packed_streamed(mapped: MappedNetwork, pi_words: np.ndarray,
+                            tplan: Optional[TilePlan] = None,
+                            tile_rows: int = _DEFAULT_TILE_ROWS,
+                            gather: Optional[str] = None,
+                            interpret: Optional[bool] = None) -> np.ndarray:
+    """``execute_packed`` through the streamed/tiled kernel: pi_words
+    (n_pis, W) uint32 -> output words (n_outputs, W) uint32."""
+    from repro.kernels.lut_eval import lut_eval_streamed
+
+    pi_words = np.asarray(pi_words, np.uint32)
+    assert pi_words.shape[0] == mapped.n_pis
+    if tplan is None:
+        tplan = compile_tile_plan(_compile_plan(mapped), mapped.n_pis,
+                                  mapped.k, tile_rows)
+    plane = lut_eval_streamed(pi_words, tplan, gather=gather,
+                              interpret=interpret)
+    out = plane[tplan.out_idx]
+    out[tplan.out_neg] = ~out[tplan.out_neg]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Executors (the engine implementations behind repro.synth.executors)
+# ---------------------------------------------------------------------------
+
+class _NumpyExecutor:
+    """Host-fold engine: ``execute_packed`` level by level, then the
+    bitplane decode — no jax anywhere on the path."""
+
+    name = "numpy"
+
+    def __init__(self, bitnet: "BitplaneNetwork",
+                 interpret: Optional[bool] = None, spec=None):
+        self._b = bitnet
+
+    def apply_codes(self, codes: np.ndarray) -> np.ndarray:
+        b = self._b
+        codes = np.asarray(codes, np.int64)
+        batch = codes.shape[0]
+        # codes -> input bitplanes (wire i*in_bits+j = bit j of code i)
+        planes = np.empty((codes.shape[1] * b.in_bits, batch), np.uint8)
+        for j in range(b.in_bits):
+            planes[j::b.in_bits] = ((codes >> j) & 1).T
+        out_words = execute_packed(b.mapped, pack_bits(planes),
+                                   plan=b._plan)
+        return self._decode(out_words, batch)
+
+    def _decode(self, out_words: np.ndarray, batch: int) -> np.ndarray:
+        b = self._b
+        out_bits = unpack_bits(out_words, batch)       # (n_out_wires, B)
+        n_out = out_bits.shape[0] // b.out_bits
+        out_codes = np.zeros((batch, n_out), np.int64)
+        for j in range(b.out_bits):
+            out_codes |= out_bits[j::b.out_bits].T.astype(np.int64) << j
+        return out_codes
+
+    def classify_codes(self, codes: np.ndarray,
+                       n_classes: int) -> np.ndarray:
+        vals = self._b.out_levels[self.apply_codes(codes)]
+        return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
+
+    def classify_packed(self, pi_words: np.ndarray, n_rows: int,
+                        n_classes: int) -> np.ndarray:
+        b = self._b
+        out_words = execute_packed(b.mapped, pi_words, plan=b._plan)
+        vals = b.out_levels[self._decode(out_words, n_rows)]
+        return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
+
+
+class _DeviceExecutor:
+    """Shared machinery of the fused on-device engines.
 
     Every public entry point is one jit: bitplane pack (32 samples per
-    int32 lane), the lut_eval kernel over all levels, the output
-    complement, code decode, and — for the classify paths — the
+    int32 lane), the netlist kernel (subclass ``_eval_words``), the
+    output complement, code decode, and — for the classify paths — the
     ``out_levels`` gather and per-request argmax. Distinct batch shapes
     retrace; serving callers pin the shape (``pad_rows``) so the hot
     path compiles once.
     """
 
+    name = "device"
+
     def __init__(self, bitnet: "BitplaneNetwork",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, spec=None):
         import jax
         import jax.numpy as jnp
-        from repro.kernels.lut_eval import default_interpret
+        from repro.kernels.spec import DEFAULT_SPEC
 
         self._jnp = jnp
-        dp = compile_device_plan(bitnet.mapped, bitnet._plan)
-        self.dp = dp
-        self.interpret = (default_interpret() if interpret is None
-                          else interpret)
+        self.spec = DEFAULT_SPEC if spec is None else spec
+        self.interpret = self.spec.resolve_interpret(interpret)
         self.in_bits = bitnet.in_bits
         self.out_bits = bitnet.out_bits
-        self.n_slots = dp.n_levels * dp.level_width
-        self._leaf = jnp.asarray(dp.leaf_idx.reshape(-1, dp.k), jnp.int32)
-        self._tt = jnp.asarray(np.ascontiguousarray(
-            dp.tt_bits.reshape(-1, 1 << dp.k)).view(np.int32))
-        self._ow = jnp.asarray(dp.out_wires.reshape(-1), jnp.int32)
-        self._out_idx = jnp.asarray(dp.out_idx, jnp.int32)
-        self._neg = jnp.asarray(np.where(dp.out_neg, -1, 0), jnp.int32)
         self._levels = jnp.asarray(bitnet.out_levels)
         self._apply = jax.jit(self._apply_codes)
         self._argmax_codes = jax.jit(self._argmax_from_codes,
@@ -247,6 +446,10 @@ class _PallasExecutor:
                                      static_argnames=("n_classes",))
 
     # ---- jit-traced building blocks -------------------------------------
+
+    def _eval_words(self, words):
+        """(n_pis, W) int32 -> complemented output words (n_outputs, W)."""
+        raise NotImplementedError
 
     def _pack(self, codes):
         """(B, n_inputs) int32 codes -> (n_pi_wires, ceil(B/32)) int32
@@ -263,27 +466,6 @@ class _PallasExecutor:
         # disjoint bit positions: int32 wraparound sum == bitwise OR
         return (lanes << jnp.arange(WORD_BITS, dtype=jnp.int32)).sum(
             axis=2, dtype=self._jnp.int32)
-
-    def _eval_words(self, words):
-        """(n_pis, W) int32 -> complemented output words (n_outputs, W)."""
-        from repro.kernels.lut_eval.lut_eval import (DEFAULT_BW,
-                                                     lut_eval_pallas)
-        jnp = self._jnp
-        dp = self.dp
-        w = words.shape[1]
-        bw = min(DEFAULT_BW, max(1, w))
-        pad = (-w) % bw
-        if pad:
-            words = jnp.pad(words, ((0, 0), (0, pad)))
-        if self.n_slots == 0:        # constant network: PIs + const only
-            plane = jnp.zeros((dp.n_wires + 1, words.shape[1]), jnp.int32)
-            plane = plane.at[1: dp.n_pis + 1].set(words)
-        else:
-            plane = lut_eval_pallas(
-                words, self._leaf, self._tt, self._ow, n_pis=dp.n_pis,
-                n_slots=self.n_slots, n_wires=dp.n_wires, k=dp.k,
-                block_w=bw, interpret=self.interpret)
-        return (plane[self._out_idx] ^ self._neg[:, None])[:, :w]
 
     def _decode(self, out_words, b):
         """(n_out_wires, W) int32 words -> (b, n_out) int32 codes."""
@@ -334,6 +516,111 @@ class _PallasExecutor:
         labels = self._argmax_words(words, n_classes=n_classes)
         return np.asarray(labels)[:n_rows]
 
+    def classify_packed(self, pi_words: np.ndarray, n_rows: int,
+                        n_classes: int) -> np.ndarray:
+        return self.classify_words(pi_words, n_rows, n_classes)
+
+
+class _PallasExecutor(_DeviceExecutor):
+    """The monolithic on-device pipeline over a ``DevicePlan`` (whole
+    wire plane resident in VMEM, one LUT slot per kernel step)."""
+
+    name = "pallas"
+
+    def __init__(self, bitnet: "BitplaneNetwork",
+                 interpret: Optional[bool] = None, spec=None):
+        super().__init__(bitnet, interpret=interpret, spec=spec)
+        jnp = self._jnp
+        dp = compile_device_plan(bitnet.mapped, bitnet._plan)
+        self.dp = dp
+        self.n_slots = dp.n_levels * dp.level_width
+        self._leaf = jnp.asarray(dp.leaf_idx.reshape(-1, dp.k), jnp.int32)
+        self._tt = jnp.asarray(np.ascontiguousarray(
+            dp.tt_bits.reshape(-1, 1 << dp.k)).view(np.int32))
+        self._ow = jnp.asarray(dp.out_wires.reshape(-1), jnp.int32)
+        self._out_idx = jnp.asarray(dp.out_idx, jnp.int32)
+        self._neg = jnp.asarray(np.where(dp.out_neg, -1, 0), jnp.int32)
+
+    def _eval_words(self, words):
+        from repro.kernels.lut_eval.lut_eval import lut_eval_pallas
+        jnp = self._jnp
+        dp = self.dp
+        w = words.shape[1]
+        bw = self.spec.tile.clamp_block_w(w)
+        pad = (-w) % bw
+        if pad:
+            words = jnp.pad(words, ((0, 0), (0, pad)))
+        if self.n_slots == 0:        # constant network: PIs + const only
+            plane = jnp.zeros((dp.n_wires + 1, words.shape[1]), jnp.int32)
+            plane = plane.at[1: dp.n_pis + 1].set(words)
+        else:
+            plane = lut_eval_pallas(
+                words, self._leaf, self._tt, self._ow, n_pis=dp.n_pis,
+                n_slots=self.n_slots, n_wires=dp.n_wires, k=dp.k,
+                block_w=bw, interpret=self.interpret)
+        return (plane[self._out_idx] ^ self._neg[:, None])[:, :w]
+
+
+class _StreamedExecutor(_DeviceExecutor):
+    """The streamed/tiled on-device pipeline over a ``TilePlan``: HBM
+    wire plane, double-buffered plan-tensor DMA, whole-tile folds.
+
+    Tile geometry comes from, in priority order: an explicit ``spec``,
+    the persisted autotune cache (keyed by the plan's sha1 fingerprint,
+    see ``repro.kernels.lut_eval.autotune``), or the spec defaults.
+    """
+
+    name = "pallas-streamed"
+
+    def __init__(self, bitnet: "BitplaneNetwork",
+                 interpret: Optional[bool] = None, spec=None,
+                 gather: Optional[str] = None, use_cache: bool = True):
+        super().__init__(bitnet, interpret=interpret, spec=spec)
+        jnp = self._jnp
+        from repro.kernels.lut_eval.lut_eval import default_gather
+        dp = compile_device_plan(bitnet.mapped, bitnet._plan)
+        if use_cache and spec is None:
+            from repro.kernels.lut_eval import autotune
+            tuned = autotune.cached_tile(dp, interpret=self.interpret)
+            if tuned is not None:
+                self.spec = self.spec.with_tile(tile_rows=tuned[0],
+                                                block_w=tuned[1])
+        tp = compile_tile_plan(bitnet._plan, dp.n_pis, dp.k,
+                               self.spec.tile.tile_rows)
+        dp.tiles = tp
+        self.dp = dp
+        self.tp = tp
+        self.gather = default_gather() if gather is None else gather
+        self._tt_tiles = jnp.asarray(np.ascontiguousarray(
+            tp.tt_tiles).view(np.int32))
+        self._leaf_tiles = jnp.asarray(tp.leaf_tiles)
+        self._leaf_loc = jnp.asarray(tp.leaf_loc)
+        self._gather_rows = jnp.asarray(tp.gather_rows)
+        self._out_base = jnp.asarray(tp.out_base)
+        self._out_idx = jnp.asarray(tp.out_idx, jnp.int32)
+        self._neg = jnp.asarray(np.where(tp.out_neg, -1, 0), jnp.int32)
+
+    def _eval_words(self, words):
+        from repro.kernels.lut_eval.lut_eval import lut_eval_streamed_pallas
+        jnp = self._jnp
+        tp = self.tp
+        w = words.shape[1]
+        bw = self.spec.tile.clamp_block_w(w)
+        pad = (-w) % bw
+        if pad:
+            words = jnp.pad(words, ((0, 0), (0, pad)))
+        if tp.n_tiles == 0 or tp.n_pis == 0:     # constant network
+            plane = jnp.zeros((tp.n_rows, words.shape[1]), jnp.int32)
+            plane = plane.at[1: tp.n_pis + 1].set(words)
+        else:
+            plane = lut_eval_streamed_pallas(
+                words, self._tt_tiles, self._leaf_tiles, self._leaf_loc,
+                self._gather_rows, self._out_base, n_pis=tp.n_pis,
+                n_tiles=tp.n_tiles, tile_rows=tp.tile_rows,
+                gather_cap=tp.gather_cap, n_rows=tp.n_rows, k=tp.k,
+                block_w=bw, gather=self.gather, interpret=self.interpret)
+        return (plane[self._out_idx] ^ self._neg[:, None])[:, :w]
+
 
 # ---------------------------------------------------------------------------
 # Whole-network bitplane inference (LogicNetwork-compatible front end)
@@ -346,30 +633,31 @@ class BitplaneNetwork:
     (SOP -> AIG -> balance/rewrite -> k-LUT map); ``__call__`` matches
     ``LogicNetwork.__call__`` bit-exactly on every reachable input.
 
-    ``engine`` selects where the netlist executes:
-      * ``"numpy"``  — host fold, level-by-level (``execute_packed``);
-      * ``"pallas"`` — the ``kernels.lut_eval`` kernel over the
-        device-resident plan, pack→levels→complement→argmax in one jit
-        (interpret-mode on CPU, compiled on TPU).
-    Both are bit-identical on every reachable input.
+    ``engine`` names an executor in the ``repro.synth.executors``
+    registry (built-ins: ``"numpy"``, ``"pallas"``,
+    ``"pallas-streamed"`` — see the module docstring; register your own
+    with ``executors.register``). Unknown names raise
+    ``UnknownEngineError`` listing the registered engines. All engines
+    are bit-identical on every reachable input.
     """
 
     def __init__(self, net, mapped: MappedNetwork, engine: str = "numpy",
-                 interpret: Optional[bool] = None):
-        if engine not in ENGINES:
-            raise ValueError(f"unknown bitplane engine {engine!r} "
-                             f"(expected one of {ENGINES})")
+                 interpret: Optional[bool] = None, spec=None):
+        from .executors import get as _get_engine
+        self._factory = _get_engine(engine)    # typed error on bad name
         self.net = net
         self.mapped = mapped
         self.engine = engine
         self.interpret = interpret
+        self.spec = spec
         # lazy import: this module loads during repro.serve/__init__
         # (via aggregate), while repro.obs pulls repro.serve.metrics —
         # a module-level import here would close an import cycle
         from repro.obs.trace import NULL_TRACER
         self.tracer = NULL_TRACER
         self._plan = _compile_plan(mapped)
-        self._device: Optional[_PallasExecutor] = None
+        self._exec = None
+        self._device_compat: Optional[_PallasExecutor] = None
         self.in_bits = net.in_spec.code_bits
         last = net.layers[-1]
         self.out_bits = last.out_spec.code_bits
@@ -392,30 +680,32 @@ class BitplaneNetwork:
         return bn
 
     @property
-    def device(self) -> _PallasExecutor:
-        """The fused on-device executor (built lazily on first use)."""
-        if self._device is None:
-            self._device = _PallasExecutor(self, interpret=self.interpret)
-        return self._device
+    def executor(self):
+        """This network's engine instance (built lazily on first use)."""
+        if self._exec is None:
+            self._exec = self._factory(self, interpret=self.interpret,
+                                       spec=self.spec)
+        return self._exec
+
+    @property
+    def device(self) -> _DeviceExecutor:
+        """The fused on-device executor (built lazily on first use).
+
+        For device engines this is ``executor`` itself; under the numpy
+        engine it builds the monolithic pallas executor on the side, so
+        callers that want a device path regardless of the configured
+        engine (profiling, checks) keep working."""
+        ex = self.executor
+        if isinstance(ex, _DeviceExecutor):
+            return ex
+        if self._device_compat is None:
+            self._device_compat = _PallasExecutor(
+                self, interpret=self.interpret, spec=self.spec)
+        return self._device_compat
 
     def apply_codes(self, codes: np.ndarray) -> np.ndarray:
         """(B, n_inputs) input codes -> (B, n_out_neurons) output codes."""
-        codes = np.asarray(codes, np.int64)
-        if self.engine == "pallas":
-            return self.device.apply_codes(codes)
-        batch = codes.shape[0]
-        # codes -> input bitplanes (wire i*in_bits+b = bit b of code i)
-        planes = np.empty((codes.shape[1] * self.in_bits, batch), np.uint8)
-        for b in range(self.in_bits):
-            planes[b::self.in_bits] = ((codes >> b) & 1).T
-        out_words = execute_packed(self.mapped, pack_bits(planes),
-                                   plan=self._plan)
-        out_bits = unpack_bits(out_words, batch)       # (n_out_wires, B)
-        n_out = out_bits.shape[0] // self.out_bits
-        out_codes = np.zeros((batch, n_out), np.int64)
-        for b in range(self.out_bits):
-            out_codes |= out_bits[b::self.out_bits].T.astype(np.int64) << b
-        return out_codes
+        return self.executor.apply_codes(np.asarray(codes, np.int64))
 
     def __call__(self, x) -> np.ndarray:
         """Real inputs -> decoded real outputs (LogicNetwork contract)."""
@@ -423,38 +713,21 @@ class BitplaneNetwork:
         return self.out_levels[self.apply_codes(codes)]
 
     def classify(self, x, n_classes: int) -> np.ndarray:
-        if self.engine == "pallas":    # quantize → fused device pipeline
-            codes = np.asarray(self.net.quantize_inputs(x))
-            return self.device.classify_codes(codes, n_classes)
-        vals = self(x)
-        return np.argmax(vals[..., :n_classes], axis=-1).astype(np.int32)
+        codes = np.asarray(self.net.quantize_inputs(x))
+        return self.executor.classify_codes(codes, n_classes)
 
     def classify_packed(self, pi_words: np.ndarray, n_rows: int,
                         n_classes: int) -> np.ndarray:
         """Packed PI bitplanes -> per-lane argmax labels, (n_rows,) int32.
 
-        The serve-aggregation entry point: on the pallas engine the
-        words go straight to the device and only the scattered argmax
+        The serve-aggregation entry point: on device engines the words
+        go straight to the kernel and only the scattered argmax
         returns; on numpy it is the host fold + decode."""
-        if self.engine == "pallas":
-            with self.tracer.span("lut_eval", cat="kernel", args={
-                    "rows": n_rows, "engine": "pallas",
-                    "n_levels": len(self._plan.levels)}):
-                return self.device.classify_words(pi_words, n_rows,
-                                                  n_classes)
-        with self.tracer.span("lut_eval", cat="kernel",
-                              args={"rows": n_rows, "engine": "numpy"}):
-            out_words = execute_packed(self.mapped, pi_words,
-                                       plan=self._plan)
-            out_bits = unpack_bits(out_words, n_rows)
-            out_codes = np.zeros(
-                (n_rows, out_bits.shape[0] // self.out_bits), np.int64)
-            for b in range(self.out_bits):
-                out_codes |= (out_bits[b::self.out_bits].T.astype(np.int64)
-                              << b)
-            vals = self.out_levels[out_codes]
-            return np.argmax(vals[..., :n_classes],
-                             axis=-1).astype(np.int32)
+        with self.tracer.span("lut_eval", cat="kernel", args={
+                "rows": n_rows, "engine": self.engine,
+                "n_levels": len(self._plan.levels)}):
+            return self.executor.classify_packed(pi_words, n_rows,
+                                                 n_classes)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,130 @@
+"""Pluggable executor-engine registry for ``BitplaneNetwork``.
+
+``BitplaneNetwork(engine=...)`` used to be a hard-coded string switch;
+this module makes the engine a lookup. An *engine* is a name bound to a
+factory ``factory(bitnet, *, interpret=None, spec=None) -> Executor``;
+the returned object implements the three-method ``Executor`` protocol
+(the exact call surface ``BitplaneNetwork`` delegates to). Built-ins
+registered at import:
+
+  * ``"numpy"``           — host bitplane fold (no jax on the path);
+  * ``"pallas"``          — monolithic device kernel, wire plane in VMEM;
+  * ``"pallas-streamed"`` — streamed/tiled kernel, wire plane in HBM,
+    double-buffered plan DMA (the fast one; see
+    ``repro.kernels.lut_eval``).
+
+Registering a custom engine is one call and every call site that takes
+``engine=`` (``BitplaneNetwork``, ``compile_logic_network``,
+``LogicEngine``, ``launch.serve --engine``) picks it up with zero edits:
+
+    from repro.synth import executors
+
+    @executors.register("my-engine")
+    def build(bitnet, interpret=None, spec=None):
+        return MyExecutor(bitnet)
+
+Unknown names raise ``UnknownEngineError`` (a ``KeyError``) naming the
+registered engines, at ``BitplaneNetwork`` construction time — not on
+the first batch.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """What an engine must implement (see ``_NumpyExecutor`` /
+    ``_DeviceExecutor`` in ``repro.synth.executor`` for references).
+
+    All three methods must be bit-identical to the numpy host fold on
+    every reachable input — ``repro.check``'s miter passes and the
+    engine-equivalence tests hold engines to that."""
+
+    def apply_codes(self, codes: np.ndarray) -> np.ndarray:
+        """(B, n_inputs) int codes -> (B, n_out_neurons) int64 codes."""
+        ...
+
+    def classify_codes(self, codes: np.ndarray,
+                       n_classes: int) -> np.ndarray:
+        """(B, n_inputs) int codes -> (B,) int32 argmax labels."""
+        ...
+
+    def classify_packed(self, pi_words: np.ndarray, n_rows: int,
+                        n_classes: int) -> np.ndarray:
+        """(n_pi_wires, W) uint32 packed bitplanes -> (n_rows,) int32
+        argmax labels (the serve-aggregation hot path)."""
+        ...
+
+
+ExecutorFactory = Callable[..., Executor]
+
+
+class UnknownEngineError(KeyError):
+    """Raised for an ``engine=`` name with no registered executor."""
+
+    def __init__(self, name: str, known: Tuple[str, ...]):
+        self.name = name
+        self.known = tuple(known)
+        super().__init__(
+            f"unknown bitplane engine {name!r} (registered engines: "
+            f"{', '.join(self.known) if self.known else '<none>'})")
+
+    def __str__(self) -> str:   # KeyError str() would quote the message
+        return self.args[0]
+
+
+_REGISTRY: Dict[str, ExecutorFactory] = {}
+
+
+def register(name: str, factory: Optional[ExecutorFactory] = None):
+    """Bind ``name`` to an executor factory (idempotent re-bind wins).
+
+    Usable directly — ``register("x", build)`` — or as a decorator —
+    ``@register("x")``. The factory is called lazily, on the first
+    batch through a ``BitplaneNetwork`` configured with that engine.
+    """
+    if factory is None:
+        def _bind(f: ExecutorFactory) -> ExecutorFactory:
+            _REGISTRY[name] = f
+            return f
+        return _bind
+    _REGISTRY[name] = factory
+    return factory
+
+
+def get(name: str) -> ExecutorFactory:
+    """Factory for a registered engine; ``UnknownEngineError`` if not."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownEngineError(name, names()) from None
+
+
+def names() -> Tuple[str, ...]:
+    """Registered engine names, sorted (for CLIs and error messages)."""
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-in engines (factories import lazily: executor.py imports us)
+# ---------------------------------------------------------------------------
+
+@register("numpy")
+def _numpy_engine(bitnet, interpret=None, spec=None):
+    from .executor import _NumpyExecutor
+    return _NumpyExecutor(bitnet, interpret=interpret, spec=spec)
+
+
+@register("pallas")
+def _pallas_engine(bitnet, interpret=None, spec=None):
+    from .executor import _PallasExecutor
+    return _PallasExecutor(bitnet, interpret=interpret, spec=spec)
+
+
+@register("pallas-streamed")
+def _streamed_engine(bitnet, interpret=None, spec=None):
+    from .executor import _StreamedExecutor
+    return _StreamedExecutor(bitnet, interpret=interpret, spec=spec)

@@ -113,3 +113,164 @@ def test_lut_eval_exhaustive_property(n, n_outs, data):
     np.testing.assert_array_equal(
         execute_packed(mapped, pats),
         execute_packed_pallas(mapped, pats))
+
+
+# ---------------------------------------------------------------------------
+# Streamed/tiled kernel (TilePlan route) and the executor-engine registry
+# ---------------------------------------------------------------------------
+
+def test_streamed_matches_numpy_fold_ragged():
+    """Both gather modes of the streamed kernel match the host fold
+    bit-exactly on ragged word counts."""
+    from repro.synth import execute_packed_streamed
+    mapped = _random_mapped(0, 9, 3)
+    for n_words in (1, 7, 130):
+        words = random_words(mapped.n_pis, n_words, seed=n_words)
+        want = execute_packed(mapped, words)
+        for gather in ("fancy", "dma"):
+            np.testing.assert_array_equal(
+                want, execute_packed_streamed(mapped, words, gather=gather))
+
+
+def test_streamed_constant_network():
+    from repro.synth import execute_packed_streamed
+    aig = AIG(3)
+    aig.outputs = [1]           # const-1 literal
+    mapped = synthesize(aig)
+    assert mapped.n_luts == 0
+    words = random_words(3, 4, seed=0)
+    np.testing.assert_array_equal(
+        execute_packed(mapped, words),
+        execute_packed_streamed(mapped, words))
+
+
+def test_streamed_multi_tile_levels():
+    """tile_rows smaller than every level forces multi-tile bands (and
+    gather reuse across tiles); results stay bit-identical."""
+    from repro.synth import compile_tile_plan, execute_packed_streamed
+    from repro.synth.executor import _compile_plan as cp
+    mapped = _random_mapped(4, 10, 4)
+    plan = cp(mapped)
+    tp = compile_tile_plan(plan, mapped.n_pis, mapped.k, tile_rows=8)
+    assert tp.n_tiles > len(plan.levels)     # levels actually split
+    words = random_words(mapped.n_pis, 9, seed=2)
+    want = execute_packed(mapped, words)
+    for gather in ("fancy", "dma"):
+        np.testing.assert_array_equal(
+            want, execute_packed_streamed(mapped, words, tplan=tp,
+                                          gather=gather))
+
+
+def test_tile_plan_structure():
+    from repro.synth import compile_tile_plan
+    from repro.synth.executor import _compile_plan as cp
+    mapped = _random_mapped(5, 9, 3)
+    plan = cp(mapped)
+    T = 16
+    tp = compile_tile_plan(plan, mapped.n_pis, mapped.k, tile_rows=T)
+    # bands are contiguous multiples of T starting after the PI rows
+    assert tp.out_base[0] == 1 + mapped.n_pis
+    assert ((np.diff(tp.out_base) % T) == 0).all()
+    assert tp.n_rows == tp.out_base[-1] + T
+    # staged-gather remap reproduces the direct leaf rows exactly
+    staged = tp.gather_rows[np.arange(tp.n_tiles)[:, None, None],
+                            tp.leaf_loc]
+    np.testing.assert_array_equal(staged, tp.leaf_tiles)
+    # every leaf row precedes its tile's band (topological tile order)
+    assert (tp.leaf_tiles < tp.out_base[:, None, None]).all()
+    # row_of_wire is a bijection onto real (non-pad) rows
+    rows = tp.row_of_wire
+    assert len(np.unique(rows)) == rows.shape[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 5), n_outs=st.integers(1, 3),
+       tile_rows=st.sampled_from([1, 2, 8, 32]), data=st.data())
+def test_streamed_exhaustive_property(n, n_outs, tile_rows, data):
+    """Random mapped netlists agree with the host fold on every input
+    pattern through the streamed kernel, at tile sizes from degenerate
+    (1 slot/tile) to larger-than-any-level."""
+    from repro.synth import compile_tile_plan, execute_packed_streamed
+    from repro.synth.executor import _compile_plan as cp
+    aig = AIG(n)
+    aig.outputs = [
+        table_to_aig(
+            aig,
+            np.array([bool((tt >> r) & 1) for r in range(1 << n)]),
+            None, [2 * (i + 1) for i in range(n)])
+        for tt in (data.draw(st.integers(0, (1 << (1 << n)) - 1))
+                   for _ in range(n_outs))]
+    mapped = synthesize(aig)
+    tp = compile_tile_plan(cp(mapped), mapped.n_pis, mapped.k,
+                           tile_rows=tile_rows)
+    pats = input_patterns(n)
+    np.testing.assert_array_equal(
+        execute_packed(mapped, pats),
+        execute_packed_streamed(mapped, pats, tplan=tp))
+
+
+def test_over_vmem_netlist_runs_streamed():
+    """A wire plane exceeding the monolithic kernel's VMEM budget fails
+    plan validation as before — but the streamed engine executes it
+    argmax-identically to the numpy fold (the whole point of tiling)."""
+    from repro.check import validate_device_plan
+    from repro.synth import (compile_device_plan, compile_tile_plan,
+                             execute_packed_streamed)
+    from repro.synth.executor import _compile_plan as cp
+    from repro.check import estimate_tile_vmem_bytes
+    from repro.check.plan_check import estimate_vmem_bytes
+    mapped = _random_mapped(6, 10, 16)
+    dp = compile_device_plan(mapped)
+    dp_t = compile_device_plan(mapped, tile_rows=8)
+    # a budget between the tiled working set and the whole-plane
+    # footprint: the monolithic plan is rejected at it
+    mono = estimate_vmem_bytes(dp)
+    tiled = estimate_tile_vmem_bytes(dp_t.tiles)
+    assert tiled < mono          # tiling shrinks the working set
+    budget = (mono + tiled) // 2
+    rep = validate_device_plan(dp, vmem_budget_bytes=budget,
+                               use_cache=False)
+    assert any(i.code == "vmem-budget" for i in rep.issues)
+    # the same netlist with a tile schedule passes the same budget...
+    rep_t = validate_device_plan(dp_t, vmem_budget_bytes=budget,
+                                 use_cache=False)
+    assert rep_t.ok, [str(i) for i in rep_t.issues]
+    # ...and executes bit-identically (hence argmax-identically)
+    words = random_words(mapped.n_pis, 33, seed=7)
+    np.testing.assert_array_equal(
+        execute_packed(mapped, words),
+        execute_packed_streamed(mapped, words, tplan=dp_t.tiles))
+
+
+def test_plan_check_tile_budget_reject():
+    """Tile working sets over budget are rejected with the tile-aware
+    message; corrupted tile schedules are caught structurally."""
+    from repro.check import validate_device_plan
+    from repro.synth import compile_device_plan
+    mapped = _random_mapped(7, 9, 3)
+    dp = compile_device_plan(mapped, tile_rows=32)
+    rep = validate_device_plan(dp, vmem_budget_bytes=1024,
+                               use_cache=False)
+    assert any(i.code == "vmem-budget" and "tile" in i.message
+               for i in rep.issues)
+    # corrupt the staged-gather remap: structural tile check fires
+    dp.tiles.gather_rows = dp.tiles.gather_rows.copy()
+    dp.tiles.gather_rows[0, 0] = dp.tiles.gather_rows[0, 0] + 1 \
+        if dp.tiles.gather_cap > 0 else 0
+    rep2 = validate_device_plan(dp, use_cache=False)
+    assert any(i.code == "tile-gather" for i in rep2.issues)
+
+
+def test_executor_registry_typed_error_and_custom_engine():
+    from repro.synth import executors
+    from repro.synth.executor import BitplaneNetwork, _NumpyExecutor
+
+    with np.testing.assert_raises(executors.UnknownEngineError):
+        executors.get("definitely-not-an-engine")
+    try:
+        executors.get("definitely-not-an-engine")
+    except executors.UnknownEngineError as e:
+        assert "numpy" in str(e) and "pallas-streamed" in str(e)
+        assert "pallas" in e.known
+    for builtin in ("numpy", "pallas", "pallas-streamed"):
+        assert builtin in executors.names()
