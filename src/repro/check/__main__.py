@@ -22,7 +22,7 @@ from .plan_check import DEFAULT_VMEM_BUDGET
 from .report import CheckReport
 
 PASS_CHOICES = ("lint", "equiv", "plan", "concurrency", "srclint",
-                "trace")
+                "trace", "formal")
 
 
 def _build_jsc(fast: bool, seed: int):
@@ -36,6 +36,36 @@ def _build_jsc(fast: bool, seed: int):
     data = train_test(n_train, n_test, seed=seed)
     res = train_jsc(JSC_S, steps=steps, batch=128, data=data)
     return to_logic(JSC_S, res.params, res.masks, res.bn_state)
+
+
+def _print_formal(rep: CheckReport) -> None:
+    """Per-stage UNSAT-proof / conflict statistics + a verdict tally.
+
+    The tally line is machine-greppable — CI gates on ``SAT=0`` (no
+    proven inequivalence) and ``UNPROVEN=0`` (every wide cone actually
+    proved within the conflict budget).
+    """
+    tally = {"UNSAT": 0, "SAT": 0, "UNPROVEN": 0}
+    for key in sorted(rep.info):
+        if not key.startswith("formal["):
+            continue
+        st = rep.info[key]
+        stage = key[len("formal["):-1]
+        tally[st["verdict"]] = tally.get(st["verdict"], 0) + 1
+        print(f"[check] formal {stage}: {st['verdict']} "
+              f"({st.get('outputs', '?')} outputs, "
+              f"{st.get('outputs_merged', '?')} merged by sweep, "
+              f"{st.get('queries', 0)} SAT queries, "
+              f"{st.get('conflicts', 0)} conflicts, "
+              f"{st.get('nodes', 0)} miter nodes)")
+    sw = rep.info.get("sat_sweep")
+    if sw:
+        print(f"[check] formal sat-sweep: {sw['dup_lut_outputs']} duplicate "
+              f"LUT output(s); {sw['luts']} -> {sw['luts_after_sweep']} "
+              f"LUTs after merge ({sw['sat_queries']} queries, "
+              f"{sw['conflicts']} conflicts)")
+    print(f"[check] formal verdicts: UNSAT={tally['UNSAT']} "
+          f"SAT={tally['SAT']} UNPROVEN={tally['UNPROVEN']}")
 
 
 def main(argv=None) -> int:
@@ -57,6 +87,10 @@ def main(argv=None) -> int:
     ap.add_argument("--vmem-budget-mb", type=float, default=None,
                     help="device-plan VMEM budget (default "
                     f"{DEFAULT_VMEM_BUDGET / 2**20:.0f} MiB)")
+    ap.add_argument("--conflict-budget", type=int, default=None,
+                    help="SAT conflict budget for the formal pass "
+                    "(default: repro.check.sat.DEFAULT_CONFLICT_BUDGET); "
+                    "exceeding it yields UNPROVEN warnings, not a pass")
     ap.add_argument("--trace-file", default=None, metavar="PATH",
                     help="exported trace (Chrome JSON or JSONL) for the "
                     "trace pass; without it a synthetic FakeClock "
@@ -100,14 +134,18 @@ def main(argv=None) -> int:
             static.merge(check_duplicate_definitions())
         reports.append(static)
 
-    if not args.static and wanted & {"lint", "equiv", "plan"}:
+    if not args.static and wanted & {"lint", "equiv", "plan", "formal"}:
         print("[check] building JSC-S artifacts "
               f"({'fast' if args.fast else 'full'}) ...", flush=True)
         net = _build_jsc(args.fast, args.seed)
         rep = check_synth_pipeline(net=net, effort=args.effort,
                                    fast=args.fast,
                                    vmem_budget_bytes=budget,
-                                   seed=args.seed)
+                                   seed=args.seed,
+                                   formal="formal" in wanted,
+                                   conflict_budget=args.conflict_budget)
+        if "formal" in wanted:
+            _print_formal(rep)
         if wanted != set(PASS_CHOICES):
             rep.issues = [i for i in rep.issues if i.pass_name in wanted]
         reports.append(rep)

@@ -18,6 +18,16 @@ lock already held can be exempted by listing them in a
 ``_LOCKED_METHODS`` tuple class attribute (the lint then also checks
 they are never called from an unlocked context within the class).
 
+Fields that are *intentionally* unguarded (single-writer counters,
+append-before-serving callback lists, racy-but-monotonic timestamps)
+are declared in a ``_LOCK_FREE`` tuple — that records the decision in
+code instead of leaving the field looking forgotten, and the lint
+rejects a field listed in both ``_GUARDED_BY`` and ``_LOCK_FREE`` as a
+conflicting annotation. Both annotations cover ``repro.serve`` and the
+shared-mutable classes of ``repro.obs`` (windowed metrics, burn-rate
+monitor, online profiler — all fed from scheduler/executor/client
+threads concurrently).
+
 **Reject-reason coverage.** Every constant on ``RejectReason`` must
 have (a) a real code path in ``repro.serve`` that raises/records it and
 (b) at least one test referencing it — a reason nothing can raise, or
@@ -35,8 +45,10 @@ PASS = "concurrency"
 
 _REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
 SERVE_DIR = _REPO_ROOT / "src" / "repro" / "serve"
+OBS_DIR = _REPO_ROOT / "src" / "repro" / "obs"
 TEST_DIR = _REPO_ROOT / "tests"
 SERVE_FILES = ("sched.py", "replica.py", "aggregate.py")
+OBS_FILES = ("window.py", "slo.py", "online.py")
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +144,7 @@ def lint_class_locks(cls: ast.ClassDef, rep: CheckReport,
                      filename: str) -> None:
     guarded: Dict[str, str] = {}
     locked_methods: Tuple[str, ...] = ()
+    lock_free: Tuple[str, ...] = ()
     for stmt in cls.body:
         if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
                 and isinstance(stmt.targets[0], ast.Name)):
@@ -146,6 +159,15 @@ def lint_class_locks(cls: ast.ClassDef, rep: CheckReport,
                 guarded = d
             elif stmt.targets[0].id == "_LOCKED_METHODS":
                 locked_methods = _str_tuple(stmt.value)
+            elif stmt.targets[0].id == "_LOCK_FREE":
+                lock_free = _str_tuple(stmt.value)
+    for field in lock_free:
+        rep.checked += 1
+        if field in guarded:
+            rep.error(PASS, "conflicting-annotation",
+                      f"{cls.name}.{field} is listed in both _GUARDED_BY "
+                      f"(lock {guarded[field]!r}) and _LOCK_FREE — pick "
+                      f"one", where=f"{filename}:{cls.lineno}")
     if not guarded:
         return
     rep.info.setdefault("guarded_classes", []).append(cls.name)
@@ -286,6 +308,12 @@ def check_concurrency(serve_dir: Optional[pathlib.Path] = None,
     if files is None:
         for fname in SERVE_FILES:
             p = serve / fname
+            if p.exists():
+                lint_file_locks(p, rep)
+            else:
+                rep.error(PASS, "missing-file", f"{p} not found")
+        for fname in OBS_FILES:
+            p = OBS_DIR / fname
             if p.exists():
                 lint_file_locks(p, rep)
             else:

@@ -28,11 +28,13 @@ import numpy as np
 
 from repro.synth.aig import AIG
 from repro.synth.executor import DevicePlan, MappedNetwork, execute_packed
-from repro.synth.simulate import WORD_BITS, pack_bits, simulate
+from repro.synth.simulate import (WORD_BITS, pack_bits, simulate,
+                                  unpack_bits)
 
 from .report import CheckReport, Counterexample
 
 PASS = "equiv"
+FORMAL_PASS = "formal"
 
 # beyond this many PIs exhaustive enumeration (2^n patterns) is skipped
 EXHAUSTIVE_LIMIT = 20
@@ -110,7 +112,8 @@ EvalFn = Callable[[np.ndarray], np.ndarray]
 def miter(eval_ref: EvalFn, eval_dut: EvalFn, n_pis: int,
           rep: CheckReport, stage: str,
           exhaustive_limit: int = EXHAUSTIVE_LIMIT,
-          n_random_words: int = 64, seed: int = 0) -> bool:
+          n_random_words: int = 64, seed: int = 0,
+          pass_name: str = PASS) -> bool:
     """Compare two (n_pis, W) -> (n_out, W) evaluators; on mismatch,
     record the first counterexample on ``rep``. Returns equivalence."""
     if n_pis == 0:      # constant network: a single empty pattern
@@ -123,7 +126,7 @@ def miter(eval_ref: EvalFn, eval_dut: EvalFn, n_pis: int,
         r, w, bit = hit
         cex = Counterexample((), r, int((b[r, w] >> bit) & 1),
                              int((a[r, w] >> bit) & 1), exhaustive=True)
-        rep.error(PASS, stage, "stages disagree on the constant network",
+        rep.error(pass_name, stage, "stages disagree on the constant network",
                   counterexample=cex)
         return False
     if n_pis <= exhaustive_limit:
@@ -142,7 +145,7 @@ def miter(eval_ref: EvalFn, eval_dut: EvalFn, n_pis: int,
                                      int((b[r, w] >> bit) & 1),
                                      int((a[r, w] >> bit) & 1),
                                      exhaustive=True)
-                rep.error(PASS, stage,
+                rep.error(pass_name, stage,
                           f"exhaustive miter found a mismatch "
                           f"(minterm {(w0 + w) * WORD_BITS + bit})",
                           counterexample=cex)
@@ -168,7 +171,7 @@ def miter(eval_ref: EvalFn, eval_dut: EvalFn, n_pis: int,
             cex = Counterexample(_lane_bits(words, w, bit), r,
                                  int((b[r, w] >> bit) & 1),
                                  int((a[r, w] >> bit) & 1))
-            rep.error(PASS, stage,
+            rep.error(pass_name, stage,
                       f"{kind}-vector miter found a mismatch "
                       f"({n_pis} PIs, exhaustive skipped)",
                       counterexample=cex)
@@ -177,13 +180,75 @@ def miter(eval_ref: EvalFn, eval_dut: EvalFn, n_pis: int,
 
 
 # ---------------------------------------------------------------------------
+# Formal (SAT) escalation
+# ---------------------------------------------------------------------------
+
+def _report_formal(rep: CheckReport, stage: str, res, eval_ref: EvalFn,
+                   eval_dut: EvalFn, n_pis: int) -> bool:
+    """Fold a ``FormalResult`` into the report.
+
+    Returns True when the formal engine settled the question (UNSAT
+    proof or SAT counterexample) — the caller then skips sampling.
+    UNPROVEN records a warning and returns False: the caller *must*
+    fall back to the sampled miter, loudly, never silently pass.
+    """
+    from .sat import SAT, UNSAT
+
+    stat_keys = ("nodes", "queries", "merged_struct", "merged_sat",
+                 "refuted", "query_unknown", "conflicts", "decisions",
+                 "propagations", "outputs", "outputs_merged")
+    rep.info[f"formal[{stage}]"] = {
+        "verdict": res.verdict,
+        **{k: res.stats[k] for k in stat_keys if k in res.stats}}
+    if res.verdict == UNSAT:
+        rep.checked += res.stats.get("outputs", 0)
+        return True
+    if res.verdict == SAT:
+        words = pack_bits(np.array(res.cex, np.uint8)[:, None])
+        a, b = np.asarray(eval_ref(words)), np.asarray(eval_dut(words))
+        hit = _first_mismatch(a, b, n_valid_lanes=1)
+        if hit is None:       # engine said SAT but the sim disagrees
+            rep.error(FORMAL_PASS, stage,
+                      "SAT counterexample failed bitplane replay — "
+                      "formal engine bug, treat the stage as unverified")
+            return True
+        r, w, bit = hit
+        cex = Counterexample(res.cex, r, int((b[r, w] >> bit) & 1),
+                             int((a[r, w] >> bit) & 1), formal=True)
+        rep.error(FORMAL_PASS, stage,
+                  f"SAT miter proved inequivalence ({n_pis} PIs, "
+                  f"{res.stats['conflicts']} conflicts); counterexample "
+                  f"replayed through the bitplane sim",
+                  counterexample=cex)
+        return True
+    rep.warn(FORMAL_PASS, stage,
+             f"UNPROVEN: conflict budget exhausted "
+             f"({res.stats['conflicts']} conflicts, "
+             f"{res.stats['queries']} queries) — falling back to the "
+             f"sampled miter, which is a filter, not a proof")
+    return False
+
+
+def _formal_kwargs(conflict_budget, seed):
+    kw = {"seed": seed}
+    if conflict_budget is not None:
+        kw["conflict_budget"] = conflict_budget
+    return kw
+
+
+# ---------------------------------------------------------------------------
 # Stage adjacencies
 # ---------------------------------------------------------------------------
 
 def equiv_aigs(ref: AIG, dut: AIG, name: str = "aig-rewrite",
+               formal: bool = False, conflict_budget: Optional[int] = None,
                **kw) -> CheckReport:
     """AIG <-> transformed AIG (balance / rewrite must preserve the
-    function on *every* input — no don't-cares at this stage)."""
+    function on *every* input — no don't-cares at this stage).
+
+    ``formal=True`` escalates cones wider than the exhaustive limit to
+    the SAT engine: UNSAT is a proof at any width, SAT yields a
+    replayed counterexample, UNPROVEN falls back to sampling."""
     rep = CheckReport(name)
     if ref.n_pis != dut.n_pis or len(ref.outputs) != len(dut.outputs):
         rep.error(PASS, "aig-rewrite",
@@ -191,15 +256,28 @@ def equiv_aigs(ref: AIG, dut: AIG, name: str = "aig-rewrite",
                   f"{len(ref.outputs)} POs vs {dut.n_pis}/"
                   f"{len(dut.outputs)}")
         return rep
-    miter(lambda w: simulate(ref, w), lambda w: simulate(dut, w),
-          ref.n_pis, rep, "aig-rewrite", **kw)
+    e_ref = lambda w: simulate(ref, w)
+    e_dut = lambda w: simulate(dut, w)
+    limit = kw.get("exhaustive_limit", EXHAUSTIVE_LIMIT)
+    if formal and ref.n_pis > limit:
+        from .sat import prove_aig_equiv
+        res = prove_aig_equiv(ref, dut,
+                              **_formal_kwargs(conflict_budget,
+                                               kw.get("seed", 0)))
+        if _report_formal(rep, "aig-rewrite", res, e_ref, e_dut, ref.n_pis):
+            return rep
+        kw.setdefault("pass_name", FORMAL_PASS)
+    miter(e_ref, e_dut, ref.n_pis, rep, "aig-rewrite", **kw)
     return rep
 
 
 def equiv_aig_mapped(aig: AIG, mapped: MappedNetwork,
-                     name: str = "aig-mapped", **kw) -> CheckReport:
+                     name: str = "aig-mapped", formal: bool = False,
+                     conflict_budget: Optional[int] = None,
+                     **kw) -> CheckReport:
     """AIG <-> its k-LUT cover (mapping covers exact cone functions, so
-    this too must hold on every input)."""
+    this too must hold on every input); ``formal=True`` as in
+    :func:`equiv_aigs`."""
     rep = CheckReport(name)
     if aig.n_pis != mapped.n_pis or len(aig.outputs) != len(mapped.outputs):
         rep.error(PASS, "aig-mapped",
@@ -207,9 +285,18 @@ def equiv_aig_mapped(aig: AIG, mapped: MappedNetwork,
                   f"{len(aig.outputs)} POs vs {mapped.n_pis}/"
                   f"{len(mapped.outputs)}")
         return rep
-    miter(lambda w: simulate(aig, w),
-          lambda w: execute_packed(mapped, w),
-          aig.n_pis, rep, "aig-mapped", **kw)
+    e_ref = lambda w: simulate(aig, w)
+    e_dut = lambda w: execute_packed(mapped, w)
+    limit = kw.get("exhaustive_limit", EXHAUSTIVE_LIMIT)
+    if formal and aig.n_pis > limit:
+        from .sat import prove_aig_mapped
+        res = prove_aig_mapped(aig, mapped,
+                               **_formal_kwargs(conflict_budget,
+                                                kw.get("seed", 0)))
+        if _report_formal(rep, "aig-mapped", res, e_ref, e_dut, aig.n_pis):
+            return rep
+        kw.setdefault("pass_name", FORMAL_PASS)
+    miter(e_ref, e_dut, aig.n_pis, rep, "aig-mapped", **kw)
     return rep
 
 
@@ -238,8 +325,11 @@ def execute_plan_host(dplan: DevicePlan, pi_words: np.ndarray) -> np.ndarray:
 
 
 def equiv_mapped_plan(mapped: MappedNetwork, dplan: DevicePlan,
-                      name: str = "mapped-plan", **kw) -> CheckReport:
-    """Mapped netlist <-> its stacked/padded DevicePlan tensors."""
+                      name: str = "mapped-plan", formal: bool = False,
+                      conflict_budget: Optional[int] = None,
+                      **kw) -> CheckReport:
+    """Mapped netlist <-> its stacked/padded DevicePlan tensors;
+    ``formal=True`` as in :func:`equiv_aigs`."""
     rep = CheckReport(name)
     if mapped.n_pis != dplan.n_pis or \
             len(mapped.outputs) != dplan.out_idx.shape[0]:
@@ -248,9 +338,19 @@ def equiv_mapped_plan(mapped: MappedNetwork, dplan: DevicePlan,
                   f"{len(mapped.outputs)} POs vs {dplan.n_pis}/"
                   f"{dplan.out_idx.shape[0]}")
         return rep
-    miter(lambda w: execute_packed(mapped, w),
-          lambda w: execute_plan_host(dplan, w),
-          mapped.n_pis, rep, "mapped-plan", **kw)
+    e_ref = lambda w: execute_packed(mapped, w)
+    e_dut = lambda w: execute_plan_host(dplan, w)
+    limit = kw.get("exhaustive_limit", EXHAUSTIVE_LIMIT)
+    if formal and mapped.n_pis > limit:
+        from .sat import prove_mapped_plan
+        res = prove_mapped_plan(mapped, dplan,
+                                **_formal_kwargs(conflict_budget,
+                                                 kw.get("seed", 0)))
+        if _report_formal(rep, "mapped-plan", res, e_ref, e_dut,
+                          mapped.n_pis):
+            return rep
+        kw.setdefault("pass_name", FORMAL_PASS)
+    miter(e_ref, e_dut, mapped.n_pis, rep, "mapped-plan", **kw)
     return rep
 
 
@@ -304,35 +404,93 @@ def equiv_cover_aig(cover, aig: AIG, dc_mask=None,
     return rep
 
 
+def _net_mapped_eval(net, mapped: MappedNetwork, codes: np.ndarray):
+    """(got, want) output codes of the mapped net vs the LogicNetwork
+    oracle on a (n, n_inputs) batch of input codes."""
+    n = codes.shape[0]
+    want = np.asarray(net.apply_codes(codes))
+    in_bits = net.in_spec.code_bits
+    planes = np.empty((codes.shape[1] * in_bits, n), np.uint8)
+    for b in range(in_bits):
+        planes[b::in_bits] = ((codes >> b) & 1).T
+    out_words = execute_packed(mapped, pack_bits(planes))
+    out_bits_arr = unpack_bits(out_words, n)
+    out_bits = net.layers[-1].out_spec.code_bits
+    got = np.zeros((n, out_bits_arr.shape[0] // out_bits), np.int64)
+    for b in range(out_bits):
+        got |= out_bits_arr[b::out_bits].T.astype(np.int64) << b
+    return got, want
+
+
 def equiv_network_mapped(net, mapped: MappedNetwork,
                          n_samples: int = 1024, seed: int = 0,
+                         formal: bool = False,
+                         conflict_budget: Optional[int] = None,
                          name: str = "network-mapped") -> CheckReport:
-    """LogicNetwork truth-table oracle <-> mapped netlist on sampled
-    *valid* input codes.
+    """LogicNetwork truth-table oracle <-> mapped netlist on *valid*
+    input codes.
 
     The SOP extraction feeds espresso unreachable codes as don't-cares,
     so the mapped net only promises equality on codes the quantizer can
     produce — arbitrary bit patterns would yield false counterexamples.
     The counterexample here is therefore reported as an input *code*
     row, not a PI bit pattern.
+
+    ``formal=True`` first runs the SAT engine with the quantizer care
+    set encoded as CNF blocking clauses: UNSAT proves equality on every
+    reachable code (any width), SAT yields a code-row counterexample
+    replayed through the bitplane sim, UNPROVEN falls back to the
+    sampled code check below.
     """
     rep = CheckReport(name)
+    in_bits = net.in_spec.code_bits
+    if formal:
+        from .sat import SAT, UNSAT, prove_network_mapped
+        res = prove_network_mapped(
+            net, mapped, **_formal_kwargs(conflict_budget, seed))
+        stage = "network-mapped"
+        rep.info[f"formal[{stage}]"] = {
+            "verdict": res.verdict,
+            **{k: res.stats[k] for k in
+               ("nodes", "queries", "merged_struct", "merged_sat",
+                "refuted", "query_unknown", "conflicts", "outputs",
+                "outputs_merged") if k in res.stats}}
+        if res.verdict == UNSAT:
+            rep.checked += res.stats.get("outputs", 0)
+            return rep
+        if res.verdict == SAT:
+            bits = np.array(res.cex, np.int64)
+            codes = np.zeros((1, net.n_inputs), np.int64)
+            for b in range(in_bits):
+                codes[0] |= bits[b::in_bits] << b
+            got, want = _net_mapped_eval(net, mapped, codes)
+            jbad = np.nonzero(got[0] != want[0])[0]
+            if jbad.size == 0:
+                rep.error(FORMAL_PASS, stage,
+                          "SAT counterexample failed bitplane replay — "
+                          "formal engine bug, treat the stage as "
+                          "unverified")
+                return rep
+            j = int(jbad[0])
+            cex = Counterexample(tuple(int(c) for c in codes[0]), j,
+                                 int(got[0, j]), int(want[0, j]),
+                                 formal=True)
+            rep.error(FORMAL_PASS, stage,
+                      f"SAT miter proved inequivalence on a reachable "
+                      f"code row ({res.stats['conflicts']} conflicts; "
+                      f"inputs below are quantizer *codes*, not PI "
+                      f"bits); replayed through the bitplane sim",
+                      counterexample=cex)
+            return rep
+        rep.warn(FORMAL_PASS, stage,
+                 f"UNPROVEN: conflict budget exhausted "
+                 f"({res.stats['conflicts']} conflicts) — falling back "
+                 f"to sampled code rows, which is a filter, not a proof")
     rng = np.random.default_rng(seed)
     n_levels = net.in_spec.n_levels
     codes = rng.integers(0, n_levels, (n_samples, net.n_inputs),
                          dtype=np.int64)
-    want = np.asarray(net.apply_codes(codes))
-    in_bits = net.in_spec.code_bits
-    planes = np.empty((codes.shape[1] * in_bits, n_samples), np.uint8)
-    for b in range(in_bits):
-        planes[b::in_bits] = ((codes >> b) & 1).T
-    out_words = execute_packed(mapped, pack_bits(planes))
-    from repro.synth.simulate import unpack_bits
-    out_bits_arr = unpack_bits(out_words, n_samples)
-    out_bits = net.layers[-1].out_spec.code_bits
-    got = np.zeros((n_samples, out_bits_arr.shape[0] // out_bits), np.int64)
-    for b in range(out_bits):
-        got |= out_bits_arr[b::out_bits].T.astype(np.int64) << b
+    got, want = _net_mapped_eval(net, mapped, codes)
     rep.checked += n_samples
     bad = np.nonzero(np.any(got != want, axis=1))[0]
     if bad.size:

@@ -68,15 +68,21 @@ def check_sop_stage(net, n_samples: int = 4, seed: int = 0,
 def check_synth_pipeline(net=None, aig: Optional[AIG] = None,
                          effort: int = 1, k: int = 6, fast: bool = False,
                          vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
-                         seed: int = 0) -> CheckReport:
+                         seed: int = 0, formal: bool = False,
+                         conflict_budget: Optional[int] = None
+                         ) -> CheckReport:
     """Lint + stage-by-stage equivalence for one synthesis run.
 
     Accepts either a compiled ``LogicNetwork`` (full pipeline including
     the SOP stage and the valid-code oracle check) or a bare ``AIG``
     (transform stages only). ``fast`` trades vector count for CI time.
+    ``formal=True`` escalates every wide-cone miter to the SAT engine
+    (per-stage UNSAT/SAT/UNPROVEN verdicts land in ``info["formal[..]"]``)
+    and runs the SAT-sweep duplicate-LUT lint over the mapped net.
     """
     assert (net is None) != (aig is None), "pass exactly one of net/aig"
     n_rand = 16 if fast else 64
+    fkw = {"formal": formal, "conflict_budget": conflict_budget}
     rep = CheckReport("synth-pipeline")
     if net is not None:
         rep.merge(check_sop_stage(net, n_samples=2 if fast else 4,
@@ -86,20 +92,27 @@ def check_synth_pipeline(net=None, aig: Optional[AIG] = None,
     opt = optimize(aig, rounds=effort) if effort > 0 else aig
     if effort > 0:
         rep.merge(lint_aig(opt, "aig-optimized"))
-        rep.merge(equiv_aigs(aig, opt, n_random_words=n_rand, seed=seed))
+        rep.merge(equiv_aigs(aig, opt, n_random_words=n_rand, seed=seed,
+                             **fkw))
     mapped = map_aig(opt, k=k)
     rep.merge(lint_mapped(mapped))
     rep.merge(equiv_aig_mapped(opt, mapped, n_random_words=n_rand,
-                               seed=seed))
+                               seed=seed, **fkw))
     dplan = compile_device_plan(mapped)
     rep.merge(validate_device_plan(dplan,
                                    vmem_budget_bytes=vmem_budget_bytes))
     rep.merge(equiv_mapped_plan(mapped, dplan, n_random_words=n_rand,
-                                seed=seed))
+                                seed=seed, **fkw))
     if net is not None:
         rep.merge(equiv_network_mapped(net, mapped,
                                        n_samples=256 if fast else 1024,
-                                       seed=seed))
+                                       seed=seed, **fkw))
+    if formal:
+        from .sat import check_duplicate_lut_outputs
+        rep.merge(check_duplicate_lut_outputs(
+            mapped, seed=seed,
+            **({} if conflict_budget is None
+               else {"conflict_budget": conflict_budget})))
     rep.info["n_luts"] = mapped.n_luts
     rep.info["depth"] = mapped.depth
     return rep
@@ -137,22 +150,27 @@ def check_static(fast: bool = False) -> CheckReport:
 # verify= hooks (raise CheckFailure on any error)
 # ---------------------------------------------------------------------------
 
-def verify_synthesis(raw: AIG, opt: AIG, mapped: MappedNetwork) -> None:
+def verify_synthesis(raw: AIG, opt: AIG, mapped: MappedNetwork,
+                     formal: bool = False) -> None:
     """Backs ``synthesize(..., verify=True)``: the optimized AIG must
     match the raw one everywhere, and the mapping must match the
-    optimized AIG everywhere."""
+    optimized AIG everywhere. ``formal=True`` (``verify="formal"``)
+    escalates wide cones to SAT proofs."""
     rep = CheckReport("verify-synthesis")
     rep.merge(lint_aig(opt, "aig-optimized"))
     if opt is not raw:
-        rep.merge(equiv_aigs(raw, opt, n_random_words=16))
+        rep.merge(equiv_aigs(raw, opt, n_random_words=16, formal=formal))
     rep.merge(lint_mapped(mapped))
-    rep.merge(equiv_aig_mapped(opt, mapped, n_random_words=16))
+    rep.merge(equiv_aig_mapped(opt, mapped, n_random_words=16,
+                               formal=formal))
     require_ok(rep)
 
 
-def verify_plan(mapped: MappedNetwork, dplan: DevicePlan) -> None:
+def verify_plan(mapped: MappedNetwork, dplan: DevicePlan,
+                formal: bool = False) -> None:
     """Backs ``compile_device_plan(..., verify=True)``."""
     rep = CheckReport("verify-plan")
     rep.merge(validate_device_plan(dplan))
-    rep.merge(equiv_mapped_plan(mapped, dplan, n_random_words=16))
+    rep.merge(equiv_mapped_plan(mapped, dplan, n_random_words=16,
+                                formal=formal))
     require_ok(rep)

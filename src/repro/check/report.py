@@ -25,10 +25,12 @@ class Counterexample:
     got: int                     # value produced by the stage under test
     want: int                    # value produced by the reference stage
     exhaustive: bool = False     # found during exhaustive enumeration
+    formal: bool = False         # decoded from a SAT model (and replayed)
 
     def __str__(self) -> str:
         bits = "".join(str(b) for b in self.inputs)
-        kind = "exhaustive" if self.exhaustive else "sampled"
+        kind = ("SAT" if self.formal
+                else "exhaustive" if self.exhaustive else "sampled")
         return (f"output[{self.output}]: got {self.got}, want {self.want} "
                 f"on PI pattern [pi0..pi{len(self.inputs) - 1}]={bits} "
                 f"({kind})")

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -53,12 +54,25 @@ def _load(path: str) -> Dict[str, dict]:
 
 
 def _store(path: str, data: Dict[str, dict]) -> None:
+    """Atomic write: unique temp file in the target directory, then
+    ``os.replace``.  A pid-suffixed temp name is NOT enough — two
+    threads of one process (or a recycled pid) would interleave writes
+    into the same temp file; ``mkstemp`` gives each writer its own."""
     try:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        d = os.path.dirname(path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
     except OSError:
         pass                       # cache is advisory, never fatal
 

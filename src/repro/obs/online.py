@@ -56,6 +56,10 @@ class OnlineProfiler:
         table models.
     """
 
+    _GUARDED_BY = {"_sched": "_lock", "_replicas": "_lock",
+                   "n_observed": "_lock", "n_sampled": "_lock",
+                   "last_measured_us": "_lock"}
+
     def __init__(self, table: LatencyTable, predicted_us: float,
                  sample_every: int = 16, alpha: float = 0.2,
                  min_rows: int = 1):
@@ -77,11 +81,16 @@ class OnlineProfiler:
 
     # -- wiring ------------------------------------------------------------
     def attach(self, scheduler=None, replicas=None) -> "OnlineProfiler":
-        """Register consumers to push rescaled estimates into."""
-        if scheduler is not None:
-            self._sched = scheduler
-        if replicas is not None:
-            self._replicas.append(replicas)
+        """Register consumers to push rescaled estimates into.
+
+        Takes the lock: attach() may race an in-flight observe() on the
+        executor thread when consumers are wired after traffic starts.
+        """
+        with self._lock:
+            if scheduler is not None:
+                self._sched = scheduler
+            if replicas is not None:
+                self._replicas.append(replicas)
         return self
 
     @property

@@ -76,6 +76,13 @@ class BurnRateMonitor:
         not a burn.
     """
 
+    _GUARDED_BY = {"_lanes": "_lock", "_active": "_lock",
+                   "_history": "_lock"}
+    # callbacks are registered during wiring, before traffic flows, and
+    # only appended — check() iterates a list that never shrinks, so
+    # the list itself needs no lock (callbacks run outside it anyway)
+    _LOCK_FREE = ("_callbacks",)
+
     def __init__(self, slo_target: float = 0.99,
                  long_window_us: float = 60_000_000.0,
                  short_window_us: float = 5_000_000.0,

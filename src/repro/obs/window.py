@@ -103,6 +103,9 @@ class BucketRing:
     from scheduler and client threads.
     """
 
+    _GUARDED_BY = {"_buckets": "_lock"}
+    _LOCKED_METHODS = ("bucket",)
+
     def __init__(self, window_us: float, n_windows: int = 120,
                  max_samples: int = DEFAULT_BUCKET_SAMPLES):
         assert window_us > 0 and n_windows >= 1
@@ -167,6 +170,12 @@ class WindowedMetrics:
     occupancy track. ``sliding(span_us)`` collapses the trailing span
     per lane — the view the burn-rate monitor consumes.
     """
+
+    _GUARDED_BY = {"_lanes": "_lock", "_batches": "_lock"}
+    # _last_ts is a monotonic high-water mark: a concurrent max() write
+    # can only lose to a *newer* value, and sliding() treats it as an
+    # advisory "now" — benign race, deliberately unguarded
+    _LOCK_FREE = ("_last_ts",)
 
     def __init__(self, window_us: float = 1_000_000.0,
                  n_windows: int = 120,

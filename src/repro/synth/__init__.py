@@ -28,21 +28,25 @@ from .simulate import (exhaustive_equiv, input_patterns, pack_bits,
 
 
 def synthesize(aig: AIG, effort: int = 1, k: int = 6,
-               verify: bool = False) -> MappedNetwork:
+               verify=False) -> MappedNetwork:
     """balance/rewrite rounds (``effort``; 0 = map the raw AIG) followed
     by k-LUT mapping with area recovery.
 
     ``verify=True`` miters every transform against its input (rewrite
     must preserve the function everywhere, the LUT cover must match the
     optimized AIG everywhere) and raises ``repro.check.CheckFailure``
-    with a counterexample on any disagreement."""
+    with a counterexample on any disagreement. Cones wider than the
+    20-PI exhaustive limit are only *sampled*; ``verify="formal"``
+    escalates them to the ``repro.check.sat`` engine, which proves the
+    miter UNSAT at any width (or fails with a replayed SAT
+    counterexample / an explicit UNPROVEN warning)."""
     raw = aig
     if effort > 0:
         aig = optimize(aig, rounds=effort)
     mapped = map_aig(aig, k=k)
     if verify:
         from repro.check.pipeline import verify_synthesis
-        verify_synthesis(raw, aig, mapped)
+        verify_synthesis(raw, aig, mapped, formal=(verify == "formal"))
     return mapped
 
 

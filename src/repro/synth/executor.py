@@ -322,7 +322,7 @@ def compile_device_plan(mapped: MappedNetwork,
         dplan.tiles = compile_tile_plan(plan, mapped.n_pis, k, tile_rows)
     if verify:
         from repro.check.pipeline import verify_plan
-        verify_plan(mapped, dplan)
+        verify_plan(mapped, dplan, formal=(verify == "formal"))
     return dplan
 
 

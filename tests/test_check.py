@@ -491,6 +491,56 @@ def test_real_serve_stack_is_clean():
     assert rep.checked > 10
 
 
+def test_obs_classes_are_linted():
+    """The lint covers repro.obs: the shared-mutable window/burn-rate/
+    profiler classes must carry (and satisfy) lock annotations."""
+    rep = check_concurrency()
+    assert rep.ok, rep.format()
+    for cls in ("WindowedMetrics", "BurnRateMonitor", "OnlineProfiler",
+                "BucketRing"):
+        assert cls in rep.info["guarded_classes"], cls
+
+
+def test_lock_free_annotation_exempts_field(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text(textwrap.dedent('''
+        import threading
+
+        class S:
+            _GUARDED_BY = {"_q": "_lock"}
+            _LOCK_FREE = ("_hwm",)
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = []
+                self._hwm = 0.0
+
+            def push(self, t):
+                self._hwm = max(self._hwm, t)   # declared benign race
+                with self._lock:
+                    self._q.append(t)
+    '''))
+    rep = check_concurrency(files=[p])
+    assert rep.ok, rep.format()
+
+
+def test_conflicting_annotation_rejected(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text(textwrap.dedent('''
+        import threading
+
+        class S:
+            _GUARDED_BY = {"_q": "_lock"}
+            _LOCK_FREE = ("_q",)            # BUG: both annotations
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = []
+    '''))
+    rep = check_concurrency(files=[p])
+    assert any(i.code == "conflicting-annotation" for i in rep.errors)
+
+
 # ---------------------------------------------------------------------------
 # srclint + satellites
 # ---------------------------------------------------------------------------

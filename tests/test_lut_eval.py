@@ -274,3 +274,53 @@ def test_executor_registry_typed_error_and_custom_engine():
         assert "pallas" in e.known
     for builtin in ("numpy", "pallas", "pallas-streamed"):
         assert builtin in executors.names()
+
+
+def test_autotune_cache_concurrent_writers(tmp_path, monkeypatch):
+    """Many threads recording tuned shapes into one cache file: the
+    mkstemp+replace write means the file is a valid JSON snapshot at
+    every instant and no entry is torn — a pid-suffixed temp name would
+    let two threads of this one process interleave."""
+    import json
+    import threading
+
+    from repro.kernels.lut_eval import autotune
+
+    path = tmp_path / "tiles.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            if path.exists():
+                try:
+                    json.loads(path.read_text())
+                except ValueError as e:        # torn/partial write
+                    torn.append(e)
+
+    def writer(i):
+        for j in range(25):
+            autotune.record(f"fp{i}", "cpu", False,
+                            tile_rows=32, block_w=128, us=float(j))
+
+    r = threading.Thread(target=reader)
+    ws = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    r.start()
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    r.join()
+    assert not torn
+    # every fingerprint landed (last-write-wins per key, no lost keys
+    # is NOT guaranteed across writers — but each writer's own final
+    # key must be readable)
+    final = json.loads(path.read_text())
+    assert final, "cache file empty after concurrent writes"
+    for key, ent in final.items():
+        assert ent["tile_rows"] == 32 and ent["block_w"] == 128
+    assert autotune.lookup(next(iter(final)).split(":")[0], "cpu",
+                           False) == (32, 128)
+    assert not list(tmp_path.glob("*.tmp")), "leaked temp files"
